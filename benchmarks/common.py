@@ -1,0 +1,28 @@
+"""Shared benchmark utilities: timing, CSV emission, reduced-scale knobs.
+
+Every benchmark mirrors one paper table/figure at CPU-container scale (the
+full-scale numbers come from the dry-run roofline, results/dryrun_full.json).
+Output convention: ``name,value,unit,detail`` CSV rows on stdout.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of fn(*args) after warmup (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, value, unit: str, detail: str = "") -> None:
+    print(f"{name},{value},{unit},{detail}")

@@ -1,0 +1,76 @@
+"""Kernel micro-benchmarks: oracle vs Pallas(interpret) correctness timing.
+
+Wall times on CPU are NOT kernel performance (interpret mode runs the kernel
+body in Python) — the roofline analysis covers TPU projections.  This harness
+exists to pin correctness at benchmark shapes and to time the pure-jnp
+fallbacks that the CPU path actually uses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.kernels import (diffusion_conv, diffusion_conv_ref, gather_xy,
+                           linear_scan, linear_scan_ref, window_gather,
+                           window_gather_ref)
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+
+    # window_gather at PeMS-like row width
+    series = jnp.asarray(rng.standard_normal((2048, 256)).astype(np.float32))
+    starts = jnp.asarray(rng.integers(0, 2000, 32).astype(np.int32))
+    t = timed(lambda: window_gather_ref(series, starts, span=24))
+    row("kernels/window_gather_ref", f"{1e6 * t:.0f}", "us", "[2048,256] b=32")
+    pal = window_gather(series, starts, span=24, use_pallas=True)
+    ok = np.array_equal(np.asarray(pal),
+                        np.asarray(window_gather_ref(series, starts, span=24)))
+    row("kernels/window_gather_pallas_ok", int(ok), "bool", "interpret mode")
+
+    # linear_scan at RG-LRU width
+    a = jnp.asarray(rng.uniform(0.9, 1.0, (8, 1024, 256)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((8, 1024, 256)).astype(np.float32))
+    t = timed(lambda: linear_scan_ref(a, b, jnp.zeros((8, 256))))
+    row("kernels/linear_scan_ref", f"{1e3 * t:.2f}", "ms", "[8,1024,256]")
+    ps, pl = linear_scan(a, b, None, use_pallas=True, chunk=256)
+    rs, rl = linear_scan_ref(a, b, jnp.zeros((8, 256)))
+    row("kernels/linear_scan_pallas_maxerr",
+        f"{float(jnp.max(jnp.abs(ps - rs))):.2e}", "abs", "")
+
+    # flash attention at a train_4k-like tile
+    from repro.kernels import flash_attention
+    from repro.models.lm.attention import full_attention
+
+    q = jnp.asarray(rng.standard_normal((1, 512, 8, 64)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 512, 2, 64)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((1, 512, 2, 64)).astype(np.float32))
+    t = timed(lambda: full_attention(q, k, v, causal=True))
+    row("kernels/full_attention_ref", f"{1e3 * t:.2f}", "ms", "[1,512,8x64] GQA2")
+    pal = flash_attention(q, k, v, causal=True, use_pallas=True,
+                          block_q=128, block_k=128)
+    err = float(jnp.max(jnp.abs(pal - full_attention(q, k, v, causal=True))))
+    row("kernels/flash_attention_maxerr", f"{err:.2e}", "abs", "interpret mode")
+
+    # diffusion_conv at PeMS-All-LA-ish block
+    n, c, h, k = 256, 16, 32, 2
+    adj = rng.uniform(0, 1, (n, n)).astype(np.float32)
+    adj[adj < 0.6] = 0
+    np.fill_diagonal(adj, 1)
+    sup = (jnp.asarray(adj / adj.sum(1, keepdims=True)),
+           jnp.asarray(adj.T / adj.T.sum(1, keepdims=True)))
+    x = jnp.asarray(rng.standard_normal((4, n, c)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal(((1 + 2 * k) * c, h)).astype(np.float32) * 0.1)
+    bias = jnp.zeros((h,))
+    t = timed(lambda: diffusion_conv_ref(x, sup, w, bias, k_hops=k))
+    row("kernels/diffusion_conv_ref", f"{1e3 * t:.2f}", "ms", f"N={n} K={k}")
+    pal = diffusion_conv(x, sup, w, bias, k_hops=k, use_pallas=True, block_n=128)
+    ref = diffusion_conv_ref(x, sup, w, bias, k_hops=k)
+    row("kernels/diffusion_conv_pallas_maxerr",
+        f"{float(jnp.max(jnp.abs(pal - ref))):.2e}", "abs", "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig7,table3]
+Emits ``name,value,unit,detail`` CSV rows; §Dry-run/§Roofline numbers come
+from results/dryrun_full.json (produced by repro.launch.dryrun --all).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (fig7_scaling, fig9_generalized, kernels_bench,
+                        table1_memory, table2_case_study, table3_index_vs_base,
+                        table4_gpu_index, table5_shuffling, table6_a3tgcn)
+
+SUITES = {
+    "table1": table1_memory.main,
+    "table2": table2_case_study.main,
+    "table3": table3_index_vs_base.main,
+    "table4": table4_gpu_index.main,
+    "table5": table5_shuffling.main,
+    "fig7": fig7_scaling.main,
+    "fig9": fig9_generalized.main,
+    "table6": table6_a3tgcn.main,
+    "kernels": kernels_bench.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(SUITES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    failed = []
+    print("name,value,unit,detail")
+    for name in names:
+        t0 = time.perf_counter()
+        print(f"# --- {name} ---")
+        try:
+            SUITES[name]()
+        except Exception:  # noqa: BLE001 — keep the harness going
+            failed.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s")
+    if failed:
+        sys.exit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

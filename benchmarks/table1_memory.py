@@ -1,0 +1,31 @@
+"""Paper Table 1: dataset sizes before/after preprocessing (analytic, exact).
+
+Validates the eq.-1 memory model against every Table-1 dataset and reports
+index-batching's eq.-2 footprint + reduction next to it.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core import windows as W
+from repro.data.registry import TABLE1
+
+
+def main() -> None:
+    for name, d in TABLE1.items():
+        spec = W.WindowSpec(horizon=d.horizon)
+        post = W.materialized_bytes(d.entries, d.nodes, d.features, spec,
+                                    dtype_bytes=8, counting="table")
+        idx = W.index_batching_bytes(d.entries, d.nodes, d.features, spec,
+                                     dtype_bytes=8, counting="table")
+        red = 1.0 - idx / post if post else 0.0
+        row(f"table1/{name}/post_gib", f"{post / 2**30:.2f}", "GiB",
+            f"paper={d.table1_post_bytes / 2**30:.2f}")
+        if d.table1_post_bytes:
+            err = abs(post - d.table1_post_bytes) / d.table1_post_bytes
+            row(f"table1/{name}/vs_paper", f"{100 * err:.2f}", "%err", "")
+        row(f"table1/{name}/index_gib", f"{idx / 2**30:.3f}", "GiB",
+            f"reduction={100 * red:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

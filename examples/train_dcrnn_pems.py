@@ -1,0 +1,93 @@
+"""End-to-end driver: train a ~100M-weight DCRNN on a PeMS-scaled synthetic
+graph for a few hundred steps, with checkpoints, restart, and validation.
+
+This is the full production path (the same code `repro.launch.train` wraps):
+index-batching + device-resident series + global shuffling + async atomic
+checkpoints + deterministic mid-epoch resume.
+
+Run:  PYTHONPATH=src python examples/train_dcrnn_pems.py [--steps 200]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (GlobalShuffleSampler, IndexDataset, ShardInfo,
+                        WindowSpec, gather_batch)
+from repro.data import (gaussian_adjacency, make_traffic_series,
+                        random_sensor_coords, transition_matrices)
+from repro.distributed import Checkpointer, latest_step, restore
+from repro.models import dcrnn
+from repro.optim import AdamConfig, warmup_cosine
+from repro.train import TrainLoopConfig, make_train_step, run_training
+from repro.train.loop import init_train_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=400)
+    ap.add_argument("--hidden", type=int, default=96)
+    ap.add_argument("--entries", type=int, default=4_000)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_dcrnn_ckpt")
+    args = ap.parse_args()
+
+    cfg = dcrnn.DCRNNConfig(num_nodes=args.nodes, hidden=args.hidden, layers=2,
+                            max_diffusion_step=2, input_len=12, horizon=12,
+                            remat=True)
+    # weight count scales with hidden^2; report it like a real driver would
+    params = dcrnn.init(jax.random.PRNGKey(0), cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"DCRNN params: {n_params / 1e6:.2f}M  nodes={args.nodes}")
+
+    adj = gaussian_adjacency(random_sensor_coords(args.nodes))
+    supports = tuple(jnp.asarray(s) for s in transition_matrices(adj))
+    series = make_traffic_series(args.entries, args.nodes, adjacency=adj)
+    ds = IndexDataset.from_raw(series, WindowSpec(horizon=12)).to_device()
+    print(f"series resident: {ds.nbytes_index() / 2**20:.1f} MiB "
+          f"(materialized would be {ds.nbytes_materialized() / 2**30:.2f} GiB)")
+
+    def loss_fn(p, starts):
+        x, y = gather_batch(ds.series, starts, input_len=12, horizon=12)
+        return dcrnn.loss_fn(p, cfg, supports, x, y), {}
+
+    adam = AdamConfig(lr=1e-2)
+    sched = lambda s: warmup_cosine(s, base_lr=1e-2, warmup_steps=20,
+                                    total_steps=args.steps)
+    step = make_train_step(loss_fn, adam, sched)
+    sampler = GlobalShuffleSampler(ds.train_windows, args.batch, ShardInfo(0, 1))
+    epochs = max(1, -(-args.steps // sampler.steps_per_epoch))
+
+    state = init_train_state(params, adam)
+    ck = Checkpointer(args.ckpt_dir, keep=2)
+    start_step = 0
+    if latest_step(args.ckpt_dir) is not None:
+        state, start_step = restore(args.ckpt_dir, state)
+        print(f"resumed from step {start_step}")
+
+    def eval_fn(st):
+        ids = ds.starts[ds.val_windows[: 4 * args.batch]]
+        l, _ = loss_fn(st["params"], jnp.asarray(ids))
+        return {"val_mae": float(l)}
+
+    t0 = time.perf_counter()
+    state, history = run_training(
+        state=state, train_step=step, sampler=sampler,
+        batch_of_starts=lambda ids: jnp.asarray(ds.starts[ids]),
+        loop=TrainLoopConfig(epochs=epochs, log_every=20, ckpt_every=50,
+                             ckpt_dir=args.ckpt_dir),
+        eval_fn=eval_fn, checkpointer=ck,
+        start_epoch=start_step // sampler.steps_per_epoch,
+        start_step=start_step)
+    logs = [h for h in history if "loss" in h]
+    vals = [h for h in history if "val_mae" in h]
+    print(f"wall {time.perf_counter() - t0:.1f}s  "
+          f"train {logs[0]['loss']:.4f}->{logs[-1]['loss']:.4f}  "
+          f"val {vals[-1]['val_mae']:.4f}  ckpts={ck.steps()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Full dry-run campaign runner: one shard of the (arch × shape × mesh) matrix.
+
+Usage: python results/campaign.py <shard_idx> <n_shards> <out.json>
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+import sys
+
+from repro.launch.dryrun import run_cell
+from repro.launch.specs import all_cells
+from repro.configs import get_arch
+
+shard, n_shards, out = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3]
+
+jobs = []
+for aid, shape, skip in all_cells():
+    if skip:
+        jobs.append(("skip", aid, shape, skip, False))
+        continue
+    for mp in (False, True):
+        jobs.append(("run", aid, shape, None, mp))
+# ST-GNN extra placements (paper comparison: baseline-DDP vs generalized)
+for aid in ("dcrnn-pems", "pgt-dcrnn-pems-all-la"):
+    shape = get_arch(aid).shapes[0].name
+    for placement in ("partitioned", "ondemand"):
+        jobs.append(("run-st", aid, shape, placement, False))
+
+records = []
+for i, job in enumerate(jobs):
+    if i % n_shards != shard:
+        continue
+    kind, aid, shape, extra, mp = job
+    if kind == "skip":
+        records.append({"arch": aid, "shape": shape, "status": "skipped",
+                        "reason": extra, "mesh": "-"})
+        print(f"[skip] {aid}:{shape}")
+        continue
+    kw = {}
+    if kind == "run-st":
+        kw["placement"] = extra
+    records.append(run_cell(aid, shape, multi_pod=mp, **kw))
+
+with open(out, "w") as f:
+    json.dump(records, f, indent=1)
+print(f"shard {shard}: wrote {len(records)} records")

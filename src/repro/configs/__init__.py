@@ -1,0 +1,39 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/tests."""
+from __future__ import annotations
+
+from repro.configs.base import LM_SHAPES, ArchSpec, ShapeCell
+from repro.configs.deepseek_v2_lite_16b import ARCH as DEEPSEEK_V2_LITE
+from repro.configs.granite_34b import ARCH as GRANITE_34B
+from repro.configs.grok1_314b import ARCH as GROK1_314B
+from repro.configs.h2o_danube3_4b import ARCH as H2O_DANUBE3_4B
+from repro.configs.internvl2_26b import ARCH as INTERNVL2_26B
+from repro.configs.minitron_8b import ARCH as MINITRON_8B
+from repro.configs.musicgen_large import ARCH as MUSICGEN_LARGE
+from repro.configs.qwen15_4b import ARCH as QWEN15_4B
+from repro.configs.recurrentgemma_2b import ARCH as RECURRENTGEMMA_2B
+from repro.configs.rwkv6_1b6 import ARCH as RWKV6_1B6
+from repro.configs.stgnn import DCRNN_PEMS, PGT_DCRNN_PEMS_ALL_LA
+
+LM_ARCHS: dict[str, ArchSpec] = {
+    a.id: a
+    for a in (
+        QWEN15_4B, MINITRON_8B, GRANITE_34B, H2O_DANUBE3_4B, INTERNVL2_26B,
+        GROK1_314B, DEEPSEEK_V2_LITE, MUSICGEN_LARGE, RECURRENTGEMMA_2B,
+        RWKV6_1B6,
+    )
+}
+
+STGNN_ARCHS = {a.id: a for a in (DCRNN_PEMS, PGT_DCRNN_PEMS_ALL_LA)}
+
+ARCHS: dict[str, ArchSpec] = {**LM_ARCHS, **STGNN_ARCHS}
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    try:
+        return ARCHS[arch_id]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}") from None
+
+
+__all__ = ["ARCHS", "LM_ARCHS", "STGNN_ARCHS", "get_arch", "ArchSpec",
+           "ShapeCell", "LM_SHAPES"]

@@ -1,0 +1,33 @@
+"""Core of the paper's contribution: index-batching and its distributed forms."""
+from repro.core.batching import (
+    gather_batch,
+    gather_batch_fused,
+    gather_batch_take,
+    gather_x_batch,
+    lm_window_batch,
+    materialize_windows,
+)
+from repro.core.distributed import Placement, batch_sharding, series_sharding
+from repro.core.index_dataset import IndexDataset
+from repro.core.sampler import GlobalShuffleSampler, LocalBatchShuffleSampler, ShardInfo
+from repro.core.windows import WindowSpec, index_batching_bytes, materialized_bytes, num_windows
+
+__all__ = [
+    "IndexDataset",
+    "WindowSpec",
+    "Placement",
+    "GlobalShuffleSampler",
+    "LocalBatchShuffleSampler",
+    "ShardInfo",
+    "gather_batch",
+    "gather_batch_fused",
+    "gather_batch_take",
+    "gather_x_batch",
+    "lm_window_batch",
+    "materialize_windows",
+    "num_windows",
+    "materialized_bytes",
+    "index_batching_bytes",
+    "series_sharding",
+    "batch_sharding",
+]

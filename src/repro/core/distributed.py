@@ -1,0 +1,91 @@
+"""Dataset placement policies — the distributed heart of the paper.
+
+Three placements, matching the paper's three distributed designs:
+
+- ``REPLICATED``  — distributed-index-batching (§4.2): every device holds the
+  full compact series (PartitionSpec() on all axes).  Window gathers are local;
+  global shuffling costs no communication; the only collective in the step is
+  the gradient all-reduce the partitioner inserts.
+
+- ``PARTITIONED`` — generalized-distributed-index-batching (§5.4): the series is
+  sharded along TIME across the data axes.  Samplers must draw per-rank indices
+  from the local time range (local batch shuffling); gathers then touch only
+  local shards and XLA inserts no data collectives.
+
+- ``ONDEMAND``    — the paper's baseline DDP: series time-sharded like
+  PARTITIONED but windows sampled *globally*, so every gather crosses shard
+  boundaries and the partitioner materialises all-gather / collective-permute
+  traffic.  We keep it as the measured baseline for Fig 7 / Fig 9.
+
+The helpers below return `NamedSharding`s plus the per-rank index domains so
+that samplers, the train loop, and the dry-run agree on one definition.
+"""
+from __future__ import annotations
+
+import enum
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.windows import WindowSpec
+
+
+class Placement(enum.Enum):
+    REPLICATED = "replicated"
+    PARTITIONED = "partitioned"
+    ONDEMAND = "ondemand"
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes that carry data parallelism (everything named pod/data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+
+
+def series_sharding(mesh: Mesh, placement: Placement) -> NamedSharding:
+    """Sharding of the resident series [T, N, F] (or token stream [T])."""
+    if placement is Placement.REPLICATED:
+        return NamedSharding(mesh, P())
+    # Time axis sharded across the data-parallel axes; nodes/features replicated.
+    return NamedSharding(mesh, P(data_axes(mesh)))
+
+
+def batch_sharding(mesh: Mesh, *, pure_dp: bool = False) -> NamedSharding:
+    """Sharding of per-step batched tensors (leading batch dim).
+
+    ``pure_dp=True`` reproduces the paper's scheme on the fixed production
+    mesh: batch sharded over EVERY axis (each chip is one DDP worker, params
+    fully replicated).  Otherwise batch shards over the data axes only and the
+    model axis is free for TP.
+    """
+    axes = mesh.axis_names if pure_dp else data_axes(mesh)
+    return NamedSharding(mesh, P(tuple(axes)))
+
+
+def local_time_range(entries: int, rank: int, world: int) -> tuple[int, int]:
+    """[start, end) of the series shard owned by ``rank`` under PARTITIONED."""
+    per = entries // world
+    rem = entries % world
+    start = rank * per + min(rank, rem)
+    return start, start + per + (1 if rank < rem else 0)
+
+
+def local_window_ids(
+    entries: int, spec: WindowSpec, rank: int, world: int, *, halo: bool = True
+) -> np.ndarray:
+    """Window ids fully contained in rank's shard (PARTITIONED placement).
+
+    ``halo=True`` lets a window start anywhere in the local range even if it
+    spills ``span−1`` steps into the next shard — the gather then reads a halo
+    region, which XLA serves with a bounded neighbour exchange.  ``halo=False``
+    keeps windows strictly interior (zero communication, slightly fewer
+    samples), matching the paper's communication-free claim.
+    """
+    start, end = local_time_range(entries, rank, world)
+    last_valid = entries - spec.span  # last legal window start globally
+    hi = min(end - (0 if halo else spec.span - 1), last_valid + 1)
+    lo = min(start, last_valid + 1)
+    return np.arange(lo, max(hi, lo), dtype=np.int32)

@@ -1,0 +1,102 @@
+"""Epoch samplers: global shuffling vs local batch shuffling (paper §4.2, §5.4).
+
+*Global shuffling* (distributed-index-batching): every epoch draws a fresh
+permutation of **all** training windows; rank r takes the r-th slice.  Because
+each worker holds the full series, this costs zero communication — the paper's
+key scalability win.
+
+*Local batch shuffling* (generalized-distributed-index-batching): each rank owns
+a fixed, contiguous window partition; only the *order of batches* inside the
+partition is shuffled between epochs (Table 5 shows accuracy parity).
+
+Samplers are deterministic functions of (seed, epoch) so that restarts resume
+mid-epoch bit-identically (fault tolerance) and all SPMD ranks agree on the
+permutation without communicating.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardInfo:
+    rank: int
+    world: int
+
+    def __post_init__(self):
+        if not 0 <= self.rank < self.world:
+            raise ValueError(f"rank {self.rank} outside world {self.world}")
+
+
+def _rng(seed: int, epoch: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, epoch]))
+
+
+class GlobalShuffleSampler:
+    """Paper default: communication-free global shuffle across all windows."""
+
+    def __init__(self, window_ids: np.ndarray, batch_per_rank: int, shard: ShardInfo, *, seed: int = 0,
+                 drop_remainder: bool = True):
+        self.window_ids = np.asarray(window_ids, dtype=np.int32)
+        self.batch = batch_per_rank
+        self.shard = shard
+        self.seed = seed
+        global_batch = batch_per_rank * shard.world
+        self.steps_per_epoch = len(self.window_ids) // global_batch
+        if not drop_remainder and len(self.window_ids) % global_batch:
+            raise NotImplementedError("padding of ragged final batch not supported")
+        if self.steps_per_epoch == 0:
+            raise ValueError(
+                f"{len(self.window_ids)} windows < global batch {global_batch}")
+
+    def epoch(self, epoch: int) -> np.ndarray:
+        """[steps, batch_per_rank] window ids for this rank."""
+        perm = _rng(self.seed, epoch).permutation(self.window_ids)
+        n = self.steps_per_epoch * self.batch * self.shard.world
+        grid = perm[:n].reshape(self.steps_per_epoch, self.shard.world, self.batch)
+        return grid[:, self.shard.rank, :]
+
+    def epoch_global(self, epoch: int) -> np.ndarray:
+        """[steps, world*batch] — the whole global batch per step, rank-major.
+        This is what feeds a single jitted SPMD step whose batch dim is sharded."""
+        perm = _rng(self.seed, epoch).permutation(self.window_ids)
+        n = self.steps_per_epoch * self.batch * self.shard.world
+        return perm[:n].reshape(self.steps_per_epoch, self.shard.world * self.batch)
+
+
+class LocalBatchShuffleSampler:
+    """Generalized variant: fixed per-rank partition, shuffled batch order."""
+
+    def __init__(self, window_ids: np.ndarray, batch_per_rank: int, shard: ShardInfo, *, seed: int = 0):
+        ids = np.asarray(window_ids, dtype=np.int32)
+        part = np.array_split(ids, shard.world)[shard.rank]
+        self.batch = batch_per_rank
+        self.shard = shard
+        self.seed = seed
+        self.steps_per_epoch = min(len(p) for p in np.array_split(ids, shard.world)) // batch_per_rank
+        if self.steps_per_epoch == 0:
+            raise ValueError("partition smaller than one batch")
+        n = self.steps_per_epoch * batch_per_rank
+        self.batches = part[:n].reshape(self.steps_per_epoch, batch_per_rank)
+
+    def epoch(self, epoch: int) -> np.ndarray:
+        order = _rng(self.seed, epoch).permutation(self.steps_per_epoch)
+        return self.batches[order]
+
+    def epoch_global(self, epoch: int) -> np.ndarray:
+        raise NotImplementedError  # assembled by the distributed launcher per-rank
+
+
+def local_shuffle_sampler(window_ids, batch_per_rank, shard, *, seed=0):
+    """Classic local shuffling (shuffle *samples* within a fixed partition) —
+    included for the Table-5 comparison axis."""
+
+    class _S(LocalBatchShuffleSampler):
+        def epoch(self, epoch: int) -> np.ndarray:
+            flat = self.batches.reshape(-1)
+            perm = _rng(self.seed, epoch).permutation(flat)
+            return perm.reshape(self.steps_per_epoch, self.batch)
+
+    return _S(window_ids, batch_per_rank, shard, seed=seed)

@@ -1,0 +1,5 @@
+from repro.distributed.checkpoint import Checkpointer, latest_step, restore
+from repro.distributed.elastic import ElasticPlan, HeartbeatMonitor, plan_remesh
+
+__all__ = ["Checkpointer", "restore", "latest_step", "HeartbeatMonitor",
+           "plan_remesh", "ElasticPlan"]

@@ -1,0 +1,134 @@
+"""Elastic runtime policy: heartbeats, straggler detection, re-mesh planning.
+
+The paper's Dask scheduler tolerates stragglers by dynamic work-stealing; a
+static SPMD program cannot, so the TPU-native policy is:
+
+1. every worker heartbeats (step counter + wall time) to the coordinator;
+2. the monitor flags DEAD workers (no heartbeat past ``timeout``) and
+   STRAGGLERS (per-step time > ``straggler_factor`` × fleet median, which on
+   a synchronous SPMD program delays *everyone*);
+3. on any flag, the planner computes the largest healthy sub-mesh that keeps
+   the model-parallel axis intact (TP groups must stay whole — losing one
+   chip of a 16-way TP group kills the whole group), shrinking only the
+   data axis;
+4. the launcher restores the latest checkpoint into the new topology
+   (``distributed.checkpoint.restore`` re-shards) and resumes from the same
+   (seed, epoch, step) — samplers are deterministic so no data is lost or
+   repeated.
+
+This module is pure policy (no jax.distributed calls) so it is fully testable
+on one host; the launcher wires it to real transports.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class WorkerView:
+    last_seen: float
+    last_step: int
+    step_time_ema: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+    dropped_workers: tuple[int, ...]
+    reason: str
+
+
+class HeartbeatMonitor:
+    """Tracks per-worker liveness and step latency."""
+
+    def __init__(self, n_workers: int, *, timeout: float = 60.0,
+                 straggler_factor: float = 3.0, clock=time.monotonic):
+        self.timeout = timeout
+        self.straggler_factor = straggler_factor
+        self._clock = clock
+        now = clock()
+        self.workers = {i: WorkerView(last_seen=now, last_step=0)
+                        for i in range(n_workers)}
+
+    def beat(self, worker: int, step: int, step_time: float | None = None) -> None:
+        """``step_time``: the worker's self-measured COMPUTE time for the step.
+        On a synchronous SPMD program wall time between beats is identical on
+        every worker (all wait for the slowest), so straggler attribution
+        requires self-reported compute durations; wall time is the fallback.
+        """
+        now = self._clock()
+        w = self.workers[worker]
+        if step > w.last_step:
+            dt = (step_time if step_time is not None
+                  else (now - w.last_seen) / max(step - w.last_step, 1))
+            w.step_time_ema = dt if w.step_time_ema is None else 0.8 * w.step_time_ema + 0.2 * dt
+        w.last_seen = now
+        w.last_step = step
+
+    def dead(self) -> list[int]:
+        now = self._clock()
+        return [i for i, w in self.workers.items() if now - w.last_seen > self.timeout]
+
+    def stragglers(self) -> list[int]:
+        times = sorted(w.step_time_ema for w in self.workers.values()
+                       if w.step_time_ema is not None)
+        if len(times) < max(3, len(self.workers) // 2):
+            return []  # not enough signal yet
+        median = times[len(times) // 2]
+        return [i for i, w in self.workers.items()
+                if w.step_time_ema is not None
+                and w.step_time_ema > self.straggler_factor * median]
+
+    def unhealthy(self) -> list[int]:
+        return sorted(set(self.dead()) | set(self.stragglers()))
+
+
+def plan_remesh(
+    n_total: int,
+    unhealthy: list[int],
+    *,
+    model_parallel: int,
+    chips_per_host: int = 4,
+    axis_names: tuple[str, str] = ("data", "model"),
+) -> ElasticPlan | None:
+    """Largest healthy mesh keeping TP groups whole.
+
+    Workers are hosts of ``chips_per_host`` chips; a TP group spans
+    ``model_parallel`` chips, so losing a host removes
+    ceil(model_parallel / chips_per_host)⁻¹… in practice we drop whole TP
+    groups containing an unhealthy host and shrink the data axis.
+    Returns None when the fleet is unchanged.
+    """
+    if not unhealthy:
+        return None
+    hosts_per_group = max(model_parallel // chips_per_host, 1)
+    n_groups = n_total // hosts_per_group
+    bad_groups = {w // hosts_per_group for w in unhealthy}
+    healthy_groups = n_groups - len(bad_groups)
+    if healthy_groups < 1:
+        raise RuntimeError("no healthy TP group left — cannot re-mesh")
+    dropped = tuple(w for g in sorted(bad_groups)
+                    for w in range(g * hosts_per_group, (g + 1) * hosts_per_group))
+    return ElasticPlan(
+        mesh_shape=(healthy_groups, model_parallel),
+        axis_names=axis_names,
+        dropped_workers=dropped,
+        reason=f"dropped {len(bad_groups)} TP group(s) containing unhealthy hosts "
+               f"{sorted(unhealthy)}",
+    )
+
+
+def scale_batch_or_steps(global_batch: int, old_dp: int, new_dp: int,
+                         *, keep_global_batch: bool = True) -> tuple[int, int]:
+    """After shrinking DP from old_dp to new_dp, either keep the global batch
+    (per-worker batch grows — preserves convergence, costs memory) or keep the
+    per-worker batch (global batch shrinks — re-scale LR by the linear rule).
+    Returns (per_worker_batch, new_global_batch)."""
+    per = global_batch // old_dp
+    if keep_global_batch:
+        # distribute remainder by rounding up, trainer trims the final microbatch
+        per_new = -(-global_batch // new_dp)
+        return per_new, per_new * new_dp
+    return per, per * new_dp

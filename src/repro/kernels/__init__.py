@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the workload's compute hot-spots.
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec), ops.py (the
+jit'd public wrapper with padding/dispatch) and ref.py (pure-jnp oracle the
+tests sweep against).  On this CPU container kernels run in interpret mode;
+on TPU the same call sites get the compiled kernel.
+"""
+from repro.kernels.diffusion_conv.ops import diffusion_conv
+from repro.kernels.diffusion_conv.ref import diffusion_conv_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.linear_scan.ops import linear_scan
+from repro.kernels.linear_scan.ref import linear_scan_ref
+from repro.kernels.window_gather.ops import gather_xy, window_gather
+from repro.kernels.window_gather.ref import window_gather_ref
+
+__all__ = [
+    "diffusion_conv", "diffusion_conv_ref",
+    "flash_attention", "flash_attention_ref",
+    "linear_scan", "linear_scan_ref",
+    "window_gather", "window_gather_ref", "gather_xy",
+]

@@ -1,0 +1,57 @@
+"""Public diffusion-conv op: jnp oracle by default, Pallas kernel on request.
+
+On this CPU container the Pallas path runs in interpret mode (Python-level
+execution of the kernel body) purely for correctness; on TPU ``interpret``
+stays False and the same call sites get the real kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.diffusion_conv.kernel import hop_project
+from repro.kernels.diffusion_conv.ref import diffusion_conv_ref
+
+_INTERPRET = jax.default_backend() == "cpu"
+
+
+def _pad_nodes(a: jnp.ndarray, n_pad: int, axes: tuple[int, ...]) -> jnp.ndarray:
+    pads = [(0, 0)] * a.ndim
+    for ax in axes:
+        pads[ax] = (0, n_pad - a.shape[ax])
+    return jnp.pad(a, pads) if any(p != (0, 0) for p in pads) else a
+
+
+def diffusion_conv(
+    x,
+    supports,
+    w,
+    b,
+    *,
+    k_hops: int,
+    use_pallas: bool = False,
+    block_n: int = 128,
+):
+    """x: [B, N, C] -> [B, N, H].  See ref.py for the weight layout."""
+    if not use_pallas:
+        return diffusion_conv_ref(x, supports, w, b, k_hops=k_hops)
+
+    bsz, n, c = x.shape
+    h = w.shape[1]
+    n_pad = int(np.ceil(n / block_n) * block_n)
+
+    z0 = _pad_nodes(jnp.transpose(x, (1, 0, 2)), n_pad, (0,))  # [Np, B, C]
+    # Identity-hop projection (plain matmul — XLA handles it optimally).
+    y = jnp.einsum("nbc,ch->nbh", z0, w[:c].astype(x.dtype))
+    wk = w[c:].reshape(len(supports), k_hops, c, h)
+
+    for si, s in enumerate(supports):
+        s_p = _pad_nodes(s, n_pad, (0, 1))
+        z = z0
+        for k in range(k_hops):
+            z, y = hop_project(
+                s_p, z, wk[si, k].astype(x.dtype), y,
+                block_n=block_n, interpret=_INTERPRET,
+            )
+    return jnp.transpose(y[:n], (1, 0, 2)) + b

@@ -1,0 +1,34 @@
+"""Public flash-attention op: [B, S, H, D] layout adapter + padding + oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention as _flash_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+_INTERPRET = jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, use_pallas: bool = False,
+                    block_q: int = 256, block_k: int = 256):
+    """q: [B, S, H, D]; k/v: [B, S, Hkv, D] -> [B, S, H, D] (model layout)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if not use_pallas:
+        out = flash_attention_ref(qt, kt, vt, causal=causal)
+        return jnp.swapaxes(out, 1, 2)
+    s = qt.shape[2]
+    bq, bk = min(block_q, s), min(block_k, s)
+    pad_q = (-s) % bq
+    pad_k = (-s) % bk
+    if pad_q or pad_k:
+        # pad kv with zeros (masked by causality for the real rows) and q with
+        # zeros (padded outputs sliced off)
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    out = _flash_kernel(qt, kt, vt, causal=causal, block_q=bq, block_k=bk,
+                        interpret=_INTERPRET)
+    return jnp.swapaxes(out[:, :, :s], 1, 2)

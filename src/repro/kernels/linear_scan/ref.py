@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the diagonal linear recurrence h_t = a_t*h_{t-1} + b_t.
+
+This is the RG-LRU inner loop (and any diagonal SSM).  The oracle is a plain
+``lax.scan`` over time — bit-faithful sequential semantics the chunked Pallas
+kernel must match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray):
+    """a, b: [B, S, D]; h0: [B, D].  Returns (h_seq [B, S, D], h_last [B, D])."""
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    hl, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), hl

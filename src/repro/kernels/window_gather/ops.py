@@ -1,0 +1,58 @@
+"""Public window-gather op: jnp oracle by default, Pallas kernel on request.
+
+Handles arbitrary trailing shape by flattening to [T, C], padding C to the
+block size, and restoring the shape afterwards.  The batching layer
+(`repro.core.batching`) routes through here when ``use_pallas=True``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.window_gather.kernel import window_gather as _window_gather_kernel
+from repro.kernels.window_gather.ref import window_gather_ref
+
+_INTERPRET = jax.default_backend() == "cpu"
+
+_LANE = 128  # TPU lane width — last-dim blocks should be multiples of this
+
+
+def window_gather(
+    series: jnp.ndarray,
+    starts: jnp.ndarray,
+    *,
+    span: int,
+    use_pallas: bool = False,
+    block_c: int | None = None,
+) -> jnp.ndarray:
+    """series: [T, ...], starts: [B] -> [B, span, ...]."""
+    if not use_pallas:
+        return window_gather_ref(series, starts, span=span)
+
+    t = series.shape[0]
+    trailing = series.shape[1:]
+    c = int(np.prod(trailing)) if trailing else 1
+    flat = series.reshape(t, c)
+    if block_c is None:
+        block_c = c if c % _LANE == 0 and c <= 4096 else min(c, 2048)
+    pad = (-c) % block_c
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    out = _window_gather_kernel(flat, starts.astype(jnp.int32), span=span,
+                                block_c=block_c, interpret=_INTERPRET)
+    out = out[..., :c]
+    return out.reshape((starts.shape[0], span) + trailing)
+
+
+def gather_xy(
+    series: jnp.ndarray,
+    starts: jnp.ndarray,
+    *,
+    input_len: int,
+    horizon: int,
+    use_pallas: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One fused gather of the full span, split into (x, y) views."""
+    w = window_gather(series, starts, span=input_len + horizon, use_pallas=use_pallas)
+    return w[:, :input_len], w[:, input_len:]

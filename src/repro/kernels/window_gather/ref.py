@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the index-batching window gather.
+
+Given the resident series ``[T, C]`` (C = flattened nodes×features, or 1 for a
+token stream) and per-sample window starts ``[B]``, produce the stacked
+windows ``[B, span, C]`` — exactly what the paper's NumPy-view batching hands
+to the model, but on-device.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def window_gather_ref(series: jnp.ndarray, starts: jnp.ndarray, *, span: int) -> jnp.ndarray:
+    """series: [T, C], starts: [B] int32 -> [B, span, C]."""
+
+    def one(s):
+        return jax.lax.dynamic_slice(series, (s,) + (0,) * (series.ndim - 1),
+                                     (span,) + series.shape[1:])
+
+    return jax.vmap(one)(starts)

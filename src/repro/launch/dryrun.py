@@ -1,0 +1,195 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The ``os.environ`` line below MUST run before any other import: jax locks the
+device count on first init, and the production meshes need 512 placeholder
+host devices.  (Set here, in the module, NOT globally — smoke tests and
+benches see 1 device.)
+
+Per cell this proves the distribution config is coherent with no hardware:
+``jit(step, in_shardings, out_shardings).lower(*ShapeDtypeStructs).compile()``
+must succeed; ``memory_analysis()`` proves the per-device footprint and
+``cost_analysis()`` + HLO collective parsing feed §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-4b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all --out results/dryrun  # full matrix
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_LINE_RE = re.compile(
+    r"=\s+(.*?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)([\w\-.]*)\(")
+
+
+def _shapes_bytes(shape_str: str) -> int:
+    """Total bytes of all HLO shapes in a string like '(f32[8,128]{1,0}, u32[])'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes of every collective op in (post-SPMD) HLO.
+
+    The compiled module is the per-device program, so these are bytes moved
+    per device.  Async pairs count the -start only; -done is skipped.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _COLL_LINE_RE.search(line)
+        if m is None:
+            continue
+        shape_str, op, suffix = m.groups()
+        if "done" in suffix:
+            continue  # async pair: bytes were counted at the -start
+        out[op] += _shapes_bytes(shape_str)
+        counts[op] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True, **build_kw) -> dict:
+    """Lower + compile one cell; return the §Dry-run / §Roofline record."""
+    from repro.launch.mesh import make_production_mesh, mesh_chips
+    from repro.launch.specs import build_cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: dict = {"arch": arch_id, "shape": shape_name,
+                 "mesh": "x".join(str(s) for s in mesh.devices.shape),
+                 "chips": mesh_chips(mesh), "multi_pod": multi_pod,
+                 "options": {k: str(v) for k, v in build_kw.items()}}
+    t0 = time.time()
+    try:
+        prog = build_cell(arch_id, shape_name, mesh, **build_kw)
+        donate = prog.meta.get("donate", ())
+        with mesh:
+            jitted = jax.jit(prog.fn, in_shardings=prog.in_shardings,
+                             out_shardings=prog.out_shardings,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*prog.args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+                "peak_bytes": int(ma.argument_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  + ma.temp_size_in_bytes
+                                  - ma.alias_size_in_bytes),
+            }
+            ca = compiled.cost_analysis()
+            hlo_text = compiled.as_text()
+            from repro.launch.costs import analyze_hlo
+
+            hc = analyze_hlo(hlo_text)
+            rec["cost"] = {
+                # loop-aware (while bodies × trip count) — the roofline inputs
+                "flops": hc.flops,
+                "bytes_accessed": hc.bytes,
+                # raw XLA numbers (loop bodies counted once) for reference
+                "xla_flops": float(ca.get("flops", 0.0)),
+                "xla_bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            }
+            rec["collectives"] = {**{k: v for k, v in hc.coll_by_op.items()},
+                                  "total": hc.coll_bytes}
+            rec["meta"] = {k: (float(v) if isinstance(v, (int, float)) else v)
+                           for k, v in prog.meta.items()}
+            rec["kind"] = prog.kind
+            rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — report, don't crash the matrix
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    if verbose:
+        if rec["status"] == "ok":
+            mem = rec["memory"]
+            print(f"[ok] {arch_id}:{shape_name} mesh={rec['mesh']} "
+                  f"compile={rec['compile_s']}s "
+                  f"peak/device={mem['peak_bytes']/2**30:.2f}GiB "
+                  f"flops/device={rec['cost']['flops']:.3e} "
+                  f"coll/device={rec['collectives']['total']/2**20:.1f}MiB")
+        else:
+            print(f"[ERR] {arch_id}:{shape_name} mesh={rec['mesh']}: {rec['error']}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="full 40-cell matrix")
+    ap.add_argument("--placement", default="replicated",
+                    choices=["replicated", "partitioned", "ondemand"],
+                    help="ST-GNN series placement")
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    args = ap.parse_args()
+
+    from repro.launch.specs import all_cells
+
+    records = []
+    if args.all:
+        cells = list(all_cells())
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, None)]
+
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    for aid, shape, skip in cells:
+        if skip:
+            records.append({"arch": aid, "shape": shape, "status": "skipped",
+                            "reason": skip})
+            print(f"[skip] {aid}:{shape} — {skip[:80]}")
+            continue
+        for mp in meshes:
+            kw = {}
+            from repro.configs import get_arch
+            if get_arch(aid).family == "stgnn":
+                kw["placement"] = args.placement
+            records.append(run_cell(aid, shape, multi_pod=mp, **kw))
+
+    if args.out:
+        import os as _os
+        _os.makedirs(_os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {len(records)} records -> {args.out}")
+    n_err = sum(1 for r in records if r.get("status") == "error")
+    if n_err:
+        raise SystemExit(f"{n_err} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Roofline model: three terms per (arch × shape × mesh) from the dry-run.
+
+    compute    t_c = HLO_FLOPs/device   / peak_FLOP/s          (MXU ceiling)
+    memory     t_m = HLO_bytes/device   / HBM_bw               (HBM ceiling)
+    collective t_x = coll_bytes/device  / link_bw              (ICI ceiling)
+
+``cost_analysis()`` and the HLO collective parse are already per-device
+(the compiled module is the SPMD per-device program), so each term divides by
+a single chip's ceiling — equivalent to the global-total/(chips × ceiling)
+formulation.  Step time lower bound = max(terms) assuming perfect overlap;
+the dominant term is the bottleneck the §Perf loop iterates on.
+
+MODEL_FLOPS = 6·N·D (dense train), 6·N_active·D (MoE train), 2·N·D forward
+(prefill/decode); the ratio MODEL_FLOPS / (HLO_FLOPs × chips) exposes
+remat/redundancy waste (>1/3 expected under full remat, ~1 with none).
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+def model_flops(rec: dict) -> float:
+    """Useful (6ND-style) FLOPs for the whole step, all chips."""
+    meta = rec.get("meta", {})
+    if "flops_model" in meta:  # ST-GNN analytic count
+        return float(meta["flops_model"])
+    n_active = float(meta.get("active_params", 0.0))
+    tokens = float(meta.get("tokens_per_step", 0.0))
+    if rec.get("kind") == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens  # prefill/decode forward only
+
+
+def roofline_terms(rec: dict) -> dict:
+    """Three terms (seconds) + bottleneck + usefulness ratio for one record."""
+    flops_dev = rec["cost"]["flops"]
+    bytes_dev = rec["cost"]["bytes_accessed"]
+    coll_dev = rec["collectives"]["total"]
+    chips = rec["chips"]
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = bytes_dev / HBM_BW
+    t_x = coll_dev / ICI_BW
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(rec)
+    hlo_total = flops_dev * chips
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "step_lower_bound_s": bound,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": (mf / hlo_total) if hlo_total else 0.0,
+        # fraction of the roofline the *useful* math achieves if the step ran
+        # exactly at the lower bound — the score §Perf pushes up
+        "roofline_fraction": (mf / chips / PEAK_FLOPS) / bound if bound else 0.0,
+    }
+
+
+def summarize(records: list[dict]) -> list[dict]:
+    out = []
+    for rec in records:
+        if rec.get("status") != "ok":
+            out.append({"arch": rec.get("arch"), "shape": rec.get("shape"),
+                        "mesh": rec.get("mesh"), "status": rec.get("status"),
+                        "reason": rec.get("reason") or rec.get("error")})
+            continue
+        shape = rec["shape"]
+        placement = rec.get("meta", {}).get("placement")
+        if placement and placement != "replicated":
+            shape = f"{shape}:{placement[:4]}"
+        row = {"arch": rec["arch"], "shape": shape, "mesh": rec["mesh"],
+               "kind": rec["kind"], "status": "ok",
+               "peak_gib": rec["memory"]["peak_bytes"] / 2**30,
+               **roofline_terms(rec)}
+        out.append(row)
+    return out
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':24} {'shape':12} {'mesh':8} {'t_comp(s)':>10} {'t_mem(s)':>10} "
+           f"{'t_coll(s)':>10} {'bound':>10} {'dom':>7} {'useful':>7} {'RF%':>6} {'GiB/dev':>8}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"{r.get('arch', '?'):24} {r.get('shape', '?'):12} "
+                         f"{r.get('mesh', '-'):8} {r.get('status')}: "
+                         f"{str(r.get('reason'))[:60]}")
+            continue
+        lines.append(
+            f"{r['arch']:24} {r['shape']:12} {r['mesh']:8} "
+            f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+            f"{r['step_lower_bound_s']:10.4f} {r['dominant']:>7} "
+            f"{r['useful_ratio']:7.3f} {100*r['roofline_fraction']:6.1f} "
+            f"{r['peak_gib']:8.2f}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("records", help="JSON file written by repro.launch.dryrun")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    with open(args.records) as f:
+        records = json.load(f)
+    rows = summarize(records)
+    print(format_table(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

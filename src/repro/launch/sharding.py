@@ -1,0 +1,245 @@
+"""Sharding rules: param-tree path → PartitionSpec for every arch family.
+
+Scheme (Megatron-style TP over "model", FSDP over "data", pure DP over "pod"):
+
+- attention: wq/wk/wv shard the head output dim over model (iff the head
+  count divides TP so the post-matmul reshape stays shard-aligned); wo shards
+  its input dim.  MLA shards the latent-expansion weights per-head.
+- MLP: wi/wg shard d_ff (column parallel); wo shards d_ff (row parallel) —
+  one all-reduce per block, the classic pattern.
+- MoE: experts shard over model (EP) when n_experts % tp == 0, else TP
+  inside each expert over d_expert.
+- embeddings / lm_head: vocab-sharded over model when divisible.
+- FSDP: every leaf additionally shards its largest remaining dim over "data"
+  when divisible — params, grads and Adam state all follow the same spec.
+- anything that fails divisibility falls back to replication on that axis
+  (correct, just less sharded) — this is what makes ALL 10 archs lower on the
+  fixed production mesh without per-arch hand-tuning.
+
+``pure_dp=True`` reproduces the paper's DDP exactly: params fully replicated,
+batch sharded over every axis; used for the paper-faithful ST-GNN baseline.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+
+# --------------------------------------------------------------------- helpers
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _with_fsdp(spec: list, shape: tuple, mesh: Mesh, fsdp_axes: tuple[str, ...],
+               min_size: int = 2**16) -> list:
+    """Add FSDP sharding on the largest unsharded dim (params >= min_size)."""
+    if not fsdp_axes or int(np.prod(shape)) < min_size:
+        return spec
+    fsdp_n = int(np.prod([mesh.shape[a] for a in fsdp_axes]))
+    # largest dim not already sharded, divisible by the fsdp extent
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if spec[i] is None and _div(shape[i], fsdp_n):
+            spec[i] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+            break
+    return spec
+
+
+# ------------------------------------------------------------------- LM params
+def lm_param_spec(path: str, shape: tuple, cfg, mesh: Mesh, *,
+                  fsdp: tuple[str, ...] = ("data",), tp_rules: bool = True) -> P:
+    """PartitionSpec for one LM param leaf.
+
+    ``shape`` includes the stage-stacking leading ``repeats`` dim for leaves
+    under stages/ — rules index dims from the END so they hold for both.
+    ``tp_rules=False`` disables tensor parallelism entirely (the 2D/ZeRO-3
+    scheme: params fully FSDP-sharded, batch over every axis).
+    """
+    # tp=0 disables every TP rule branch (_div(n, 0) is False)
+    tp = int(mesh.shape.get("model", 1)) if tp_rules else 0
+    nd = len(shape)
+    spec: list = [None] * nd
+
+    def last(i):  # index from the end
+        return nd - i
+
+    name = path.rsplit("/", 1)[-1]
+    parent = path.rsplit("/", 2)[-2] if "/" in path else ""
+
+    if "lm_head" in path:
+        # [d, V]: vocab (last dim) sharded — column-parallel logits, so the
+        # [B,S,V] logits stay vocab-sharded with no collective in the matmul
+        if _div(shape[-1], tp):
+            spec[-1] = "model"
+    elif "embed" in path or path == "pos":
+        # [V, d] / [S, d]: vocab/position-sharded over model when divisible
+        if _div(shape[0], tp):
+            spec[0] = "model"
+    elif "/attn/" in path and name == "w":
+        hd = cfg.hd
+        if parent in ("wq", "wo"):
+            heads_ok = _div(cfg.n_heads, tp)
+            if parent == "wq" and heads_ok:
+                spec[last(1)] = "model"  # column: [*, d, H*hd]
+            elif parent == "wo" and heads_ok:
+                spec[last(2)] = "model"  # row: [*, H*hd, d]
+        elif parent in ("wk", "wv") and _div(cfg.n_kv_heads, tp):
+            spec[last(1)] = "model"
+        elif parent == "wq" and cfg.mla is not None and _div(cfg.n_heads, tp):
+            spec[last(1)] = "model"
+        elif parent in ("wukv",) and _div(cfg.n_heads, tp):
+            spec[last(1)] = "model"
+        # wdkv (latent down-proj) stays TP-replicated: its output is the cache
+    elif "/attn/" in path and name == "b":
+        if parent == "wq" and _div(cfg.n_heads, tp):
+            spec[last(1)] = "model"
+        elif parent in ("wk", "wv") and _div(cfg.n_kv_heads, tp):
+            spec[last(1)] = "model"
+    elif "/mlp/" in path and name == "w":
+        dff = shape[last(1)] if parent in ("wi", "wg") else shape[last(2)]
+        if parent in ("wi", "wg") and _div(dff, tp):
+            spec[last(1)] = "model"
+        elif parent == "wo" and _div(dff, tp):
+            spec[last(2)] = "model"
+    elif "/moe/" in path:
+        if name == "w" and parent == "router":
+            pass  # router stays replicated (tiny, f32)
+        elif name in ("wi", "wg", "wo"):
+            e = cfg.moe.n_experts
+            de = cfg.moe.d_expert or cfg.d_ff
+            if _div(e, tp):
+                spec[last(3)] = "model"  # EP: [*, E, d, de]
+            elif name in ("wi", "wg") and _div(de, tp):
+                spec[last(1)] = "model"
+            elif name == "wo" and _div(de, tp):
+                spec[last(2)] = "model"
+        elif "/shared/" in path and name == "w":
+            dff = shape[last(1)] if parent in ("wi", "wg") else shape[last(2)]
+            if parent in ("wi", "wg") and _div(dff, tp):
+                spec[last(1)] = "model"
+            elif parent == "wo" and _div(dff, tp):
+                spec[last(2)] = "model"
+    elif "/rec/" in path and name == "w":
+        w_lru = cfg.lru_width or cfg.d_model
+        if parent in ("in_x", "in_gate", "wa", "wx") and _div(w_lru, tp):
+            spec[last(1)] = "model"
+        elif parent == "out" and _div(w_lru, tp):
+            spec[last(2)] = "model"
+    elif "/rwkv/" in path and name == "w":
+        if parent in ("wr", "wk", "wv", "wg", "cm_k", "cm_r") and _div(shape[last(1)], tp):
+            spec[last(1)] = "model"
+        elif parent in ("wo", "cm_v") and _div(shape[last(2)], tp):
+            spec[last(2)] = "model"
+
+    spec = _with_fsdp(spec, shape, mesh, fsdp)
+    return P(*spec)
+
+
+def lm_param_shardings(params_shape: Any, cfg, mesh: Mesh, *,
+                       fsdp: tuple[str, ...] = ("data",), pure_dp: bool = False,
+                       tp_rules: bool = True):
+    """NamedSharding pytree congruent with the params pytree."""
+    def one(path, leaf):
+        if pure_dp:
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, lm_param_spec(_path_str(path), leaf.shape, cfg, mesh,
+                                fsdp=fsdp, tp_rules=tp_rules))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_state_shardings(param_shardings: Any, mesh: Mesh):
+    """Adam m/v follow the param shardings; step is replicated."""
+    return {
+        "m": param_shardings,
+        "v": param_shardings,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def state_shardings(param_shardings: Any, mesh: Mesh):
+    return {"params": param_shardings,
+            "opt": opt_state_shardings(param_shardings, mesh)}
+
+
+# ---------------------------------------------------------------- activations
+def batch_spec(mesh: Mesh, *, pure_dp: bool = False) -> P:
+    axes = tuple(mesh.axis_names) if pure_dp else dp_axes(mesh)
+    return P(axes)
+
+
+def batch_sharding(mesh: Mesh, *, pure_dp: bool = False) -> NamedSharding:
+    return NamedSharding(mesh, batch_spec(mesh, pure_dp=pure_dp))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# -------------------------------------------------------------------- caches
+def cache_shardings(cache_shape: Any, cfg, mesh: Mesh):
+    """Decode caches: batch over data axes, long/state dim over model.
+
+    kv caches  [R, B, S, Hkv, hd] -> P(None, dp, "model", None, None) (S-sharded:
+    the sequence axis is the only one guaranteed divisible at 32k; attention
+    over an S-sharded cache reduces partial softmax stats over model).
+    MLA latent [R, B, S, r]       -> S over model.
+    RG-LRU / RWKV state           -> feature/head dim over model when divisible.
+    """
+    dp = dp_axes(mesh)
+    tp = int(mesh.shape.get("model", 1))
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        spec: list = [None] * nd
+        # batch axis: axis 1 for stage-stacked caches, 0 otherwise
+        b_ax = 1 if nd >= 2 else 0
+        dp_n = int(np.prod([mesh.shape[a] for a in dp]))
+        if _div(leaf.shape[b_ax], dp_n):
+            spec[b_ax] = dp if len(dp) > 1 else dp[0]
+        name = _path_str(path)
+        if nd >= 4 and ("/k" in name or "/v" in name or "ckv" in name or "kpe" in name):
+            if _div(leaf.shape[b_ax + 1], tp):
+                spec[b_ax + 1] = "model"  # sequence axis
+        elif nd >= 3 and ("ckv" in name or "kpe" in name):
+            if _div(leaf.shape[b_ax + 1], tp):
+                spec[b_ax + 1] = "model"
+        else:  # recurrent state: shard trailing feature dim when divisible
+            if nd >= 2 and _div(leaf.shape[-1], tp) and leaf.shape[-1] >= 1024:
+                spec[-1] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+# -------------------------------------------------------------------- ST-GNN
+def stgnn_param_shardings(params_shape: Any, mesh: Mesh):
+    """DCRNN-family params are tiny (hidden 64) — replicate (the paper's DDP)."""
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), params_shape)
+
+
+def series_sharding(mesh: Mesh, *, partitioned: bool) -> NamedSharding:
+    """Resident series [T, N, F]: replicated (distributed-index-batching) or
+    time-sharded over the data axes (generalized / baseline-DDP)."""
+    if not partitioned:
+        return NamedSharding(mesh, P())
+    dp = dp_axes(mesh)
+    return NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0]))

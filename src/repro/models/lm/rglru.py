@@ -1,0 +1,118 @@
+"""RecurrentGemma / Griffin recurrent block: conv1d + RG-LRU gated recurrence.
+
+RG-LRU:  r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+         i_t = sigmoid(W_x x_t + b_x)          input gate
+         a_t = exp(-c * softplus(Lambda) * r_t)            (c = 8)
+         h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is linear in h, so prefill/train use ``associative_scan``
+(log-depth) — the Pallas ``linear_scan`` kernel implements the chunked TPU
+version.  Decode carries (h, conv tail) as the layer's cache: constant-size
+state is why recurrentgemma runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import LMConfig
+from repro.models.lm.layers import init_linear, linear
+
+_C = 8.0
+
+
+def init_rglru_block(rng, cfg: LMConfig, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    k1, k2, k3, k4, k5, k6 = jax.random.split(rng, 6)
+    return {
+        "in_x": init_linear(k1, cfg.d_model, w, dtype=dtype),
+        "in_gate": init_linear(k2, cfg.d_model, w, dtype=dtype),
+        "conv_w": (jax.random.normal(k3, (cfg.conv1d_width, w), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": init_linear(k4, w, w, dtype=dtype),
+        "wx": init_linear(k5, w, w, dtype=dtype),
+        # Lambda init so a^c in ~(0.9, 0.999) (Griffin appendix)
+        "lam": jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)).astype(jnp.float32),
+        "out": init_linear(k6, w, cfg.d_model, dtype=dtype),
+    }
+
+
+def _causal_conv1d(p, x):
+    """Depthwise causal conv, width W.  x: [B, S, w]."""
+    width = p["conv_w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * p["conv_w"][i].astype(x.dtype)
+              for i in range(width))
+    return out + p["conv_b"].astype(x.dtype)
+
+
+def _gates(p, x):
+    r = jax.nn.sigmoid(linear(p["wa"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(p["wx"], x).astype(jnp.float32))
+    decay = _C * jax.nn.softplus(p["lam"])  # [w], f32
+    log_a = -decay * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) with a = exp(log_a); stable via expm1.
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    b = beta * i * x.astype(jnp.float32)
+    return a, b
+
+
+def rglru_scan(p, x, h0=None, *, use_assoc: bool = True, use_pallas: bool = False):
+    """Linear recurrence over the sequence.  x: [B, S, w] -> (y, h_last)."""
+    a, b = _gates(p, x)
+    if use_pallas:
+        from repro.kernels.linear_scan import linear_scan
+
+        h0_ = jnp.zeros_like(a[:, 0]) if h0 is None else h0.astype(jnp.float32)
+        h, h_last = linear_scan(a, b, h0_, use_pallas=True)
+        return h.astype(x.dtype), h_last.astype(x.dtype)
+    if use_assoc:
+        if h0 is not None:
+            # fold the carried state in as a virtual step 0
+            a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+            b = jnp.concatenate([h0[:, None].astype(jnp.float32), b], axis=1)
+        aa, hh = jax.lax.associative_scan(
+            lambda l, r: (l[0] * r[0], l[1] * r[0] + r[1]), (a, b), axis=1)
+        h = hh[:, 1:] if h0 is not None else hh
+    else:
+        def step(carry, ab):
+            at, bt = ab
+            h = carry * at + bt
+            return h, h
+        h0_ = jnp.zeros_like(a[:, 0]) if h0 is None else h0.astype(jnp.float32)
+        _, h = jax.lax.scan(step, h0_, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+        h = jnp.moveaxis(h, 0, 1)
+    return h.astype(x.dtype), h[:, -1].astype(x.dtype)
+
+
+def rglru_block(p, cfg: LMConfig, x, *, cache=None):
+    """Full Griffin recurrent block.  x: [B, S, d] -> (y, new_cache).
+
+    cache = {"h": [B, w], "conv": [B, W-1, w]} or None (train/prefill from 0).
+    """
+    width = p["conv_w"].shape[0]
+    gate = jax.nn.gelu(linear(p["in_gate"], x))
+    u = linear(p["in_x"], x)
+    use_pallas = getattr(cfg, "use_pallas_scan", False)
+    if cache is not None:
+        u_ext = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)
+        conv = _causal_conv1d(p, u_ext)[:, width - 1 :]
+        h_seq, h_last = rglru_scan(p, conv, h0=cache["h"], use_assoc=False,
+                                   use_pallas=use_pallas)
+        new_cache = {"h": h_last, "conv": u_ext[:, -(width - 1) :]}
+    else:
+        conv = _causal_conv1d(p, u)
+        h_seq, h_last = rglru_scan(p, conv, use_pallas=use_pallas)
+        new_cache = {"h": h_last, "conv": u[:, -(width - 1) :]}
+    return linear(p["out"], h_seq * gate), new_cache
+
+
+def init_rglru_cache(cfg: LMConfig, batch: int, dtype) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), dtype),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype),
+    }

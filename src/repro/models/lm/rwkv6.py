@@ -1,0 +1,134 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Per head (size hs) the wkv recurrence over tokens t is
+
+    out_t = r_t · (S_{t-1} + (u ⊙ k_t) v_tᵀ)
+    S_t   = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+with w_t = exp(-exp(w0 + lora_w(x̄_t))) the *data-dependent* per-channel decay
+(the Finch novelty), and token-shift interpolation x̄ = lerp(x_t, x_{t-1}, μ+lora).
+Attention-free: state is [H, hs, hs] per sequence — constant in context length,
+which is why rwkv6 runs the long_500k cell.  The sequential scan is the target
+of the ``linear_scan`` Pallas kernel (chunked form).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import LMConfig
+from repro.models.lm.layers import init_linear, linear, rms_norm
+
+_LORA_R = 32
+
+
+def _lora_init(rng, d, out, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "a": (jax.random.normal(k1, (d, _LORA_R), jnp.float32) * 0.01).astype(dtype),
+        "b": (jax.random.normal(k2, (_LORA_R, out), jnp.float32) * 0.01).astype(dtype),
+    }
+
+
+def _lora(p, x):
+    return jnp.tanh(x @ p["a"].astype(x.dtype)) @ p["b"].astype(x.dtype)
+
+
+def init_rwkv_block(rng, cfg: LMConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    n_h = d // hs
+    ks = jax.random.split(rng, 12)
+    p = {
+        "mu": {n: (jax.random.uniform(ks[0], (d,)) * 0.5 + 0.25).astype(dtype)
+               for n in ("r", "k", "v", "g", "w")},
+        "lora_mix": _lora_init(ks[1], d, d, dtype),  # shared data-dep shift mix
+        "wr": init_linear(ks[2], d, d, dtype=dtype),
+        "wk": init_linear(ks[3], d, d, dtype=dtype),
+        "wv": init_linear(ks[4], d, d, dtype=dtype),
+        "wg": init_linear(ks[5], d, d, dtype=dtype),
+        "w0": (jnp.zeros((d,)) - 0.6).astype(jnp.float32),
+        "lora_w": _lora_init(ks[6], d, d, dtype),
+        "u": (jax.random.normal(ks[7], (n_h, hs), jnp.float32) * 0.1).astype(jnp.float32),
+        "ln_x": jnp.ones((d,), dtype),  # per-head group norm gain
+        "wo": init_linear(ks[8], d, d, dtype=dtype),
+        # channel mix
+        "cm_mu_k": (jax.random.uniform(ks[9], (d,)) * 0.5 + 0.25).astype(dtype),
+        "cm_mu_r": (jax.random.uniform(ks[9], (d,)) * 0.5 + 0.25).astype(dtype),
+        "cm_k": init_linear(ks[10], d, cfg.d_ff, dtype=dtype),
+        "cm_v": init_linear(ks[11], cfg.d_ff, d, dtype=dtype),
+        "cm_r": init_linear(ks[6], d, d, dtype=dtype),
+    }
+    return p
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / carried state at t=0).  x: [B, S, d]."""
+    prev = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """r/k/v: [B, S, H, hs], w: [B, S, H, hs] decay in (0,1), u: [H, hs].
+    s0: [B, H, hs, hs].  Returns (out [B, S, H, hs], s_last)."""
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # [B, H, hs]
+        kv = kt[..., :, None] * vt[..., None, :]  # [B,H,hs,hs]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    s_last, out = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(out, 0, 1), s_last
+
+
+def time_mix(p, cfg: LMConfig, x, *, cache=None):
+    """x: [B, S, d] -> (y, new_cache {shift [B,d], state [B,H,hs,hs]})."""
+    b, s, d = x.shape
+    hs = cfg.rwkv_head_size
+    n_h = d // hs
+    last = None if cache is None else cache["shift"]
+    xs = _shift(x, last)
+    mix = _lora(p["lora_mix"], x)
+
+    def lerp(name):
+        mu = p["mu"][name].astype(x.dtype)
+        return x + (xs - x) * jnp.clip(mu + mix, 0.0, 1.0)
+
+    r = linear(p["wr"], lerp("r")).reshape(b, s, n_h, hs)
+    k = linear(p["wk"], lerp("k")).reshape(b, s, n_h, hs)
+    v = linear(p["wv"], lerp("v")).reshape(b, s, n_h, hs)
+    g = jax.nn.silu(linear(p["wg"], lerp("g")))
+    w_log = p["w0"].astype(jnp.float32) + _lora(p["lora_w"], lerp("w")).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(b, s, n_h, hs)  # data-dependent decay
+
+    s0 = (jnp.zeros((b, n_h, hs, hs), jnp.float32) if cache is None
+          else cache["state"].astype(jnp.float32))
+    out, s_last = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), w, p["u"], s0)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    # per-head group norm
+    out = rms_norm(out.reshape(b, s, n_h, hs), 1.0, cfg.norm_eps).reshape(b, s, d)
+    y = linear(p["wo"], out * p["ln_x"].astype(x.dtype) * g)
+    return y, {"shift": x[:, -1], "state": s_last.astype(x.dtype)}
+
+
+def channel_mix(p, cfg: LMConfig, x, *, cache=None):
+    last = None if cache is None else cache["shift"]
+    xs = _shift(x, last)
+    mk = x + (xs - x) * p["cm_mu_k"].astype(x.dtype)
+    mr = x + (xs - x) * p["cm_mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(linear(p["cm_k"], mk)))
+    return jax.nn.sigmoid(linear(p["cm_r"], mr)) * linear(p["cm_v"], k), {"shift": x[:, -1]}
+
+
+def init_rwkv_cache(cfg: LMConfig, batch: int, dtype) -> dict:
+    hs = cfg.rwkv_head_size
+    n_h = cfg.d_model // hs
+    return {
+        "tm": {"shift": jnp.zeros((batch, cfg.d_model), dtype),
+               "state": jnp.zeros((batch, n_h, hs, hs), dtype)},
+        "cm": {"shift": jnp.zeros((batch, cfg.d_model), dtype)},
+    }

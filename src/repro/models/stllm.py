@@ -1,0 +1,78 @@
+"""ST-LLM-style model (Liu et al. 2024) — the paper's §5.5 scaling-study model.
+
+Spatial-temporal tokenisation: each graph node's input window [T', F] becomes
+one token via a linear patch embedding, plus learned spatial (per-node) and
+time-of-day embeddings; the token sequence (length N) runs through the LM
+backbone (GPT2-style here, built from ``repro.models.lm``); a regression head
+maps each node token to its horizon forecast.  Index-batching applies
+unchanged: the model consumes the same sequence-to-sequence windows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import model as lm
+from repro.models.lm.config import LMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class STLLMConfig:
+    num_nodes: int
+    in_features: int = 2
+    out_features: int = 1
+    input_len: int = 12
+    horizon: int = 12
+    d_model: int = 256
+    layers: int = 6
+    n_heads: int = 8
+    d_ff: int = 1024
+    steps_per_day: int = 288
+    dtype: str = "float32"
+
+    def backbone_config(self) -> LMConfig:
+        return LMConfig(
+            name="stllm-backbone", layers=self.layers, d_model=self.d_model,
+            n_heads=self.n_heads, n_kv_heads=self.n_heads, d_ff=self.d_ff,
+            vocab=1, attn="full", pos="none", mlp="gelu",
+            dtype=self.dtype, param_dtype="float32",
+        )
+
+
+def init(rng, cfg: STLLMConfig) -> dict[str, Any]:
+    kp, ks, kt, kb, kh = jax.random.split(rng, 5)
+    in_dim = cfg.input_len * cfg.in_features
+    return {
+        "patch": {"w": jax.random.normal(kp, (in_dim, cfg.d_model), jnp.float32)
+                  / jnp.sqrt(in_dim), "b": jnp.zeros((cfg.d_model,))},
+        "spatial": jax.random.normal(ks, (cfg.num_nodes, cfg.d_model), jnp.float32) * 0.02,
+        "tod": jax.random.normal(kt, (cfg.steps_per_day, cfg.d_model), jnp.float32) * 0.02,
+        "backbone": lm.init(kb, cfg.backbone_config()),
+        "head": {"w": jax.random.normal(kh, (cfg.d_model, cfg.horizon * cfg.out_features),
+                                        jnp.float32) / jnp.sqrt(cfg.d_model),
+                 "b": jnp.zeros((cfg.horizon * cfg.out_features,))},
+    }
+
+
+def apply(params, cfg: STLLMConfig, x_seq: jnp.ndarray, *, tod_index=None) -> jnp.ndarray:
+    """x_seq: [B, T', N, F] -> [B, horizon, N, out_features]."""
+    b, t, n, f = x_seq.shape
+    tokens = jnp.transpose(x_seq, (0, 2, 1, 3)).reshape(b, n, t * f)
+    x = tokens @ params["patch"]["w"].astype(tokens.dtype) + params["patch"]["b"]
+    x = x + params["spatial"][None].astype(x.dtype)
+    if tod_index is not None:  # [B] time-of-day bucket of the window start
+        x = x + params["tod"][tod_index][:, None].astype(x.dtype)
+    h, _ = lm.backbone(params["backbone"], cfg.backbone_config(), x)
+    out = h.astype(jnp.float32) @ params["head"]["w"] + params["head"]["b"]
+    out = out.reshape(b, n, cfg.horizon, cfg.out_features)
+    return jnp.transpose(out, (0, 2, 1, 3))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def loss_fn(params, cfg: STLLMConfig, x, y):
+    pred = apply(params, cfg, x)
+    return jnp.mean(jnp.abs(pred - y[..., : cfg.out_features]))

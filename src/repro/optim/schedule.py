@@ -1,0 +1,27 @@
+"""LR schedules, including the linear-scaling rule the paper's §5.3.3
+follow-up uses to offset large-global-batch MAE degradation (Goyal et al.;
+You et al. [67])."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, base_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step, *, base_lr: float, **_):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), base_lr)
+
+
+def linear_scaled_lr(base_lr: float, global_batch: int, base_batch: int,
+                     cap: float = 16.0) -> float:
+    """Linear LR scaling for large global batches (capped): the mitigation the
+    paper cites for the MAE growth in Fig. 8."""
+    return base_lr * min(global_batch / base_batch, cap)

@@ -1,0 +1,4 @@
+from repro.train.loop import TrainLoopConfig, make_train_step, run_training
+from repro.train.serve import ServeConfig, Server
+
+__all__ = ["make_train_step", "run_training", "TrainLoopConfig", "Server", "ServeConfig"]

@@ -1,0 +1,17 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; only repro.launch.dryrun forces 512 placeholder devices."""
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,86 @@
+"""Window math + the paper's memory model (eqs. 1 & 2, Table 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import windows as W
+from repro.data.registry import TABLE1
+
+
+def test_window_counts_exact():
+    spec = W.WindowSpec(horizon=3)
+    # series of 10 steps, span 6 -> starts 0..4
+    assert W.num_windows(10, spec) == 5
+    assert list(W.window_starts(10, spec)) == [0, 1, 2, 3, 4]
+
+
+def test_window_counts_paper_vs_exact():
+    # T' == T == horizon: paper count == exact count
+    spec = W.WindowSpec(horizon=12)
+    assert W.num_windows(1000, spec, "exact") == W.num_windows(1000, spec, "paper")
+    # differs when input_len != horizon
+    spec2 = W.WindowSpec(horizon=3, input_len=5)
+    assert W.num_windows(100, spec2, "exact") == 100 - 8 + 1
+
+
+@given(entries=st.integers(1, 500), horizon=st.integers(1, 20),
+       stride=st.integers(1, 5))
+@settings(max_examples=200, deadline=None)
+def test_window_starts_all_valid(entries, horizon, stride):
+    spec = W.WindowSpec(horizon=horizon, stride=stride)
+    starts = W.window_starts(entries, spec)
+    # every start admits a full (x, y) span
+    assert all(s + spec.span <= entries for s in starts)
+    # maximal: one more window would overflow
+    if len(starts) and stride == 1:
+        assert starts[-1] + spec.span == entries
+
+
+def test_eq1_memory_growth_formula():
+    """Paper eq. (1): size = 2[(entries − (2h−1)) × h × nodes × features]."""
+    e, h, n, f = 1000, 12, 50, 2
+    spec = W.WindowSpec(horizon=h)
+    got = W.materialized_bytes(e, n, f, spec, dtype_bytes=8, counting="paper")
+    expect = 2 * (e - (2 * h - 1)) * h * n * f * 8
+    assert got == expect
+
+
+def test_eq2_index_batching_formula():
+    e, h, n, f = 1000, 12, 50, 2
+    spec = W.WindowSpec(horizon=h)
+    got = W.index_batching_bytes(e, n, f, spec, dtype_bytes=8, index_bytes=8,
+                                 counting="paper")
+    assert got == e * n * f * 8 + (e - (2 * h - 1)) * 8
+
+
+@pytest.mark.parametrize("name,rel_tol", [
+    ("metr-la", 0.01), ("pems-bay", 0.01), ("pems-all-la", 0.01), ("pems", 0.001),
+])
+def test_table1_post_preprocessing_sizes(name, rel_tol):
+    """Reproduce the paper's Table 1 'Size After Preprocessing' (f64, GiB).
+
+    Table 1 numbers match entries − 2·horizon windows (DESIGN.md §7).
+    """
+    d = TABLE1[name]
+    spec = W.WindowSpec(horizon=d.horizon)
+    got = W.materialized_bytes(d.entries, d.nodes, d.features, spec,
+                               dtype_bytes=8, counting="table")
+    assert got == pytest.approx(d.table1_post_bytes, rel=rel_tol), (
+        f"{name}: {got / 2**30:.2f} GiB vs paper {d.table1_post_bytes / 2**30:.2f}")
+
+
+def test_pems_memory_reduction_89pct():
+    """The paper's headline: up to 89% peak-memory reduction on PeMS-scale data."""
+    d = TABLE1["pems"]
+    spec = W.WindowSpec(horizon=d.horizon)
+    red = W.memory_reduction(d.entries, d.nodes, d.features, spec)
+    assert red > 0.89
+
+
+@given(n=st.integers(1, 1000), train=st.floats(0.1, 0.8),
+       val=st.floats(0.0, 0.19))
+@settings(max_examples=100, deadline=None)
+def test_split_partitions(n, train, val):
+    tr, va, te = W.split_windows(n, train, val)
+    joined = np.concatenate([tr, va, te])
+    assert np.array_equal(joined, np.arange(n))
