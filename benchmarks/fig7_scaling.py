@@ -5,7 +5,8 @@ Two views:
    "worker"'s step runs sequentially on this CPU (lock-step SPMD semantics),
    so reported speedup = T(1)/T(w) with perfect overlap — an upper bound that
    isolates ALGORITHMIC communication cost (which we account analytically
-   from batch bytes moved).
+   from batch bytes moved).  The per-worker step is the `repro.pipeline`
+   fused gather+grad+Adam program under the REPLICATED placement.
 2. DRY-RUN collective bytes at production scale, read from
    results/dryrun_full.json when present: replicated vs partitioned vs
    ondemand — the Fig-7/Fig-9 contrast measured from compiled HLO.
@@ -17,44 +18,51 @@ import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import row, timed
-from repro.core import (GlobalShuffleSampler, IndexDataset, ShardInfo,
-                        WindowSpec, gather_batch)
+from repro.core import Placement, WindowSpec
 from repro.data import (gaussian_adjacency, make_traffic_series,
                         random_sensor_coords, transition_matrices)
+from repro.launch.mesh import make_host_mesh
 from repro.models import pgt_dcrnn
+from repro.pipeline import PipelineConfig, build_pipeline
+from repro.train import TrainLoopConfig
+from repro.train.loop import init_train_state
 
 N, ENTRIES, B_PER = 32, 600, 8
 
 
 def main() -> None:
     spec = WindowSpec(horizon=6, input_len=6)
-    ds = IndexDataset.from_raw(make_traffic_series(ENTRIES, N), spec)
+    series = make_traffic_series(ENTRIES, N)
     adj = gaussian_adjacency(random_sensor_coords(N))
     sup = tuple(jnp.asarray(s) for s in transition_matrices(adj))
     cfg = pgt_dcrnn.PGTDCRNNConfig(num_nodes=N, hidden=16, input_len=6, horizon=6)
     params = pgt_dcrnn.init(jax.random.PRNGKey(0), cfg)
-    series = jnp.asarray(ds.series)
-    grad = jax.jit(jax.grad(lambda p, x, y: pgt_dcrnn.loss_fn(p, cfg, sup, x, y)))
 
-    def worker_step(starts):
-        x, y = gather_batch(series, starts, input_len=6, horizon=6)
-        return grad(params, x, y)
+    def loss_fn(p, x, y):
+        return pgt_dcrnn.loss_fn(p, cfg, sup, x, y), {}
 
     window_bytes = 12 * N * 2 * 4  # one (x,y) span in f32
+    mesh = make_host_mesh()
 
     for w in (1, 2, 4, 8):
-        sampler = GlobalShuffleSampler(ds.train_windows, B_PER, ShardInfo(0, w),
-                                       seed=0)
-        starts0 = jnp.asarray(ds.starts[sampler.epoch(0)[0]])
-        t = timed(lambda: worker_step(starts0))
+        pipe = build_pipeline(
+            series, spec, mesh, loss_fn, params,
+            PipelineConfig(batch_per_rank=B_PER, placement=Placement.REPLICATED,
+                           world=w, seed=0,
+                           loop=TrainLoopConfig(donate=False)))
+        # one worker's slice of the first global batch (lock-step semantics)
+        rank0 = pipe.sampler.epoch(0)[0]
+        starts0 = pipe.batch_of_starts(rank0)
+        state = init_train_state(jax.tree.map(jnp.copy, params),
+                                 pipe.config.adam)
+        t = timed(lambda: pipe.train_step(state, starts0)[1]["loss"])
         # distributed-index: zero data bytes; DDP ships every window to its worker
         ddp_bytes = B_PER * w * window_bytes
-        row(f"fig7/steps_per_epoch_w{w}", sampler.steps_per_epoch, "steps", "")
+        row(f"fig7/steps_per_epoch_w{w}", pipe.steps_per_epoch, "steps", "")
         row(f"fig7/index_step_w{w}", f"{1e3 * t:.2f}", "ms",
-            "per-worker compute; data comms = 0 B")
+            "per-worker fused step; data comms = 0 B")
         row(f"fig7/ddp_data_bytes_w{w}", ddp_bytes, "B",
             "on-demand batch shipping per step")
 

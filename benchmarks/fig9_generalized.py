@@ -5,18 +5,21 @@ The decisive quantity is bytes communicated to assemble batches: the
 generalized variant gathers only from the LOCAL time shard (0 inter-worker
 bytes; halo windows cost one boundary exchange), while baseline DDP ships
 every window from whichever shard owns it.  We count both exactly from the
-sampler + placement math, and time the local-gather step.
+placement math in `core/distributed.py`, and time the PARTITIONED
+`repro.pipeline` step (local-shard gather fused with grad+Adam).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import row, timed
-from repro.core import IndexDataset, WindowSpec, gather_batch
-from repro.core.distributed import local_time_range, local_window_ids
+from repro.core import IndexDataset, Placement, WindowSpec
+from repro.core.distributed import local_window_ids
 from repro.data import make_traffic_series
+from repro.launch.mesh import make_host_mesh
+from repro.pipeline import PipelineConfig, build_pipeline
+from repro.train import TrainLoopConfig
+from repro.train.loop import init_train_state
 
 N, ENTRIES, B_PER, WORLD = 32, 2_048, 16, 8
 
@@ -45,16 +48,29 @@ def main() -> None:
         "expected on-demand shipping volume")
     row("fig9/generalized_epoch_bytes", "0.0", "MiB/epoch", "local gathers only")
 
-    # time one local-shard gather step (the generalized inner loop)
-    r0 = local_time_range(ENTRIES, 0, WORLD)
-    shard = jnp.asarray(series[r0[0]:r0[1] + spec.span - 1])
-    ids0 = jnp.asarray(
-        local_window_ids(ENTRIES, spec, 0, WORLD, halo=False)[:B_PER])
+    # time one PARTITIONED pipeline step (the generalized inner loop): the
+    # shard-aligned sampler draws rank-local batches, so the gather reads
+    # only the local series shard.  The train split is widened so every
+    # rank's shard holds at least one batch of train windows (a 70/10/20
+    # tail would leave the last ranks empty and force the count-split
+    # fallback, whose gathers may cross shards).
+    def loss_fn(p, x, y):
+        err = jnp.mean((x[:, -1] * p["w"] - y[:, 0]) ** 2)
+        return err, {}
 
-    def step():
-        return gather_batch(shard, ids0 - r0[0], input_len=6, horizon=6)
-
-    row("fig9/local_gather_step", f"{1e6 * timed(step):.0f}", "us", "")
+    ds = IndexDataset.from_raw(series, spec, train=0.9, val=0.05)
+    pipe = build_pipeline(
+        series, spec, make_host_mesh(), loss_fn, {"w": jnp.ones(())},
+        PipelineConfig(batch_per_rank=B_PER, placement=Placement.PARTITIONED,
+                       world=WORLD, loop=TrainLoopConfig(donate=False)),
+        dataset=ds)
+    assert pipe.describe()["sampler"] == "ShardAlignedBatchSampler"
+    rank0 = pipe.sampler.epoch(0)[0]
+    starts0 = pipe.batch_of_starts(rank0)
+    state = init_train_state({"w": jnp.ones(())}, pipe.config.adam)
+    t = timed(lambda: pipe.train_step(state, starts0)[1]["loss"])
+    row("fig9/local_step", f"{1e6 * t:.0f}", "us",
+        "rank-0 local-batch fused gather+step")
 
 
 if __name__ == "__main__":

@@ -1,24 +1,25 @@
-"""Quickstart: the paper's workflow in ~40 lines.
+"""Quickstart: the paper's workflow in ~30 lines via `repro.pipeline`.
 
 1. Build a PeMS-shaped synthetic series + sensor graph.
-2. Index-batching preprocessing: ONE standardized series + int32 starts.
-3. GPU-index-batching: place the series on device once.
-4. Train PGT-DCRNN with global-shuffle sampling; batches are reconstructed
-   on-device from indices — no snapshot array ever exists.
+2. `build_pipeline` does the rest — index-batching preprocessing (ONE
+   standardized series + int32 starts), device placement for the chosen
+   `Placement`, the matching sampler, and a jitted train step with the
+   window gather fused in.  Batches are reconstructed on-device from
+   indices; no snapshot array ever exists.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import (GlobalShuffleSampler, IndexDataset, ShardInfo,
-                        WindowSpec, gather_batch)
+from repro.core import WindowSpec
 from repro.data import (gaussian_adjacency, make_traffic_series,
                         random_sensor_coords, transition_matrices)
+from repro.launch.mesh import make_host_mesh
 from repro.models import pgt_dcrnn
 from repro.optim import AdamConfig
-from repro.train import TrainLoopConfig, make_train_step, run_training
-from repro.train.loop import init_train_state
+from repro.pipeline import PipelineConfig, build_pipeline
+from repro.train import TrainLoopConfig
 
 NODES, ENTRIES, HORIZON, BATCH = 48, 1_000, 6, 16
 
@@ -27,29 +28,25 @@ series = make_traffic_series(ENTRIES, NODES)
 adj = gaussian_adjacency(random_sensor_coords(NODES))
 supports = tuple(jnp.asarray(s) for s in transition_matrices(adj))
 
-# 2.+3. index-batching preprocessing, then one host->device transfer
-ds = IndexDataset.from_raw(series, WindowSpec(horizon=HORIZON)).to_device()
-print(f"windows={ds.n_windows}  compact={ds.nbytes_index() / 2**20:.2f} MiB  "
-      f"materialized-would-be={ds.nbytes_materialized() / 2**20:.2f} MiB")
-
-# 4. model + index-batched train step
+# 2. model loss on gathered (x, y) windows — the only model-specific piece
 cfg = pgt_dcrnn.PGTDCRNNConfig(num_nodes=NODES, hidden=16,
                                input_len=HORIZON, horizon=HORIZON)
 params = pgt_dcrnn.init(jax.random.PRNGKey(0), cfg)
 
 
-def loss_fn(p, starts):
-    x, y = gather_batch(ds.series, starts, input_len=HORIZON, horizon=HORIZON)
+def loss_fn(p, x, y):
     return pgt_dcrnn.loss_fn(p, cfg, supports, x, y), {}
 
 
-adam = AdamConfig(lr=5e-3)
-state, history = run_training(
-    state=init_train_state(params, adam),
-    train_step=make_train_step(loss_fn, adam, lambda s: 5e-3),
-    sampler=GlobalShuffleSampler(ds.train_windows, BATCH, ShardInfo(0, 1)),
-    batch_of_starts=lambda ids: jnp.asarray(ds.starts[ids]),
-    loop=TrainLoopConfig(epochs=3, log_every=10),
-)
-logs = [h for h in history if "loss" in h]
+# 3. the pipeline: placement + sampler + fused gather/step in one call
+pipe = build_pipeline(
+    series, WindowSpec(horizon=HORIZON), make_host_mesh(), loss_fn, params,
+    PipelineConfig(batch_per_rank=BATCH, adam=AdamConfig(lr=5e-3),
+                   loop=TrainLoopConfig(epochs=3, log_every=10)))
+ds = pipe.dataset
+print(f"windows={ds.n_windows}  compact={ds.nbytes_index() / 2**20:.2f} MiB  "
+      f"materialized-would-be={ds.nbytes_materialized() / 2**20:.2f} MiB")
+
+state, history = pipe.fit()
+logs = [h for h in history if "loss" in h and "epoch_time_s" not in h]
 print(f"loss {logs[0]['loss']:.4f} -> {logs[-1]['loss']:.4f} over {len(logs)} logs")

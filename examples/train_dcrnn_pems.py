@@ -1,9 +1,10 @@
 """End-to-end driver: train a ~100M-weight DCRNN on a PeMS-scaled synthetic
 graph for a few hundred steps, with checkpoints, restart, and validation.
 
-This is the full production path (the same code `repro.launch.train` wraps):
-index-batching + device-resident series + global shuffling + async atomic
-checkpoints + deterministic mid-epoch resume.
+This is the full production path through `repro.pipeline`: index-batching +
+device-resident series + global shuffling + async atomic checkpoints +
+deterministic mid-epoch resume — the pipeline owns the sampler/placement/step
+wiring the old driver glued by hand.
 
 Run:  PYTHONPATH=src python examples/train_dcrnn_pems.py [--steps 200]
 """
@@ -14,15 +15,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (GlobalShuffleSampler, IndexDataset, ShardInfo,
-                        WindowSpec, gather_batch)
+from repro.core import WindowSpec
 from repro.data import (gaussian_adjacency, make_traffic_series,
                         random_sensor_coords, transition_matrices)
-from repro.distributed import Checkpointer, latest_step, restore
+from repro.distributed import latest_step
+from repro.launch.mesh import make_host_mesh
 from repro.models import dcrnn
 from repro.optim import AdamConfig, warmup_cosine
-from repro.train import TrainLoopConfig, make_train_step, run_training
-from repro.train.loop import init_train_state
+from repro.pipeline import PipelineConfig, build_pipeline
+from repro.train import TrainLoopConfig
 
 
 def main() -> None:
@@ -32,6 +33,8 @@ def main() -> None:
     ap.add_argument("--entries", type=int, default=4_000)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--gather", default="slice",
+                    choices=["slice", "take", "fused", "pallas"])
     ap.add_argument("--ckpt-dir", default="/tmp/repro_dcrnn_ckpt")
     args = ap.parse_args()
 
@@ -46,47 +49,39 @@ def main() -> None:
     adj = gaussian_adjacency(random_sensor_coords(args.nodes))
     supports = tuple(jnp.asarray(s) for s in transition_matrices(adj))
     series = make_traffic_series(args.entries, args.nodes, adjacency=adj)
-    ds = IndexDataset.from_raw(series, WindowSpec(horizon=12)).to_device()
-    print(f"series resident: {ds.nbytes_index() / 2**20:.1f} MiB "
-          f"(materialized would be {ds.nbytes_materialized() / 2**30:.2f} GiB)")
 
-    def loss_fn(p, starts):
-        x, y = gather_batch(ds.series, starts, input_len=12, horizon=12)
+    def loss_fn(p, x, y):
         return dcrnn.loss_fn(p, cfg, supports, x, y), {}
 
-    adam = AdamConfig(lr=1e-2)
-    sched = lambda s: warmup_cosine(s, base_lr=1e-2, warmup_steps=20,
-                                    total_steps=args.steps)
-    step = make_train_step(loss_fn, adam, sched)
-    sampler = GlobalShuffleSampler(ds.train_windows, args.batch, ShardInfo(0, 1))
-    epochs = max(1, -(-args.steps // sampler.steps_per_epoch))
-
-    state = init_train_state(params, adam)
-    ck = Checkpointer(args.ckpt_dir, keep=2)
-    start_step = 0
-    if latest_step(args.ckpt_dir) is not None:
-        state, start_step = restore(args.ckpt_dir, state)
-        print(f"resumed from step {start_step}")
-
-    def eval_fn(st):
-        ids = ds.starts[ds.val_windows[: 4 * args.batch]]
-        l, _ = loss_fn(st["params"], jnp.asarray(ids))
-        return {"val_mae": float(l)}
+    pipe = build_pipeline(
+        series, WindowSpec(horizon=12), make_host_mesh(), loss_fn, params,
+        PipelineConfig(
+            batch_per_rank=args.batch, gather=args.gather,
+            adam=AdamConfig(lr=1e-2),
+            schedule=lambda s: warmup_cosine(s, base_lr=1e-2, warmup_steps=20,
+                                             total_steps=args.steps),
+            loop=TrainLoopConfig(log_every=20, ckpt_every=50,
+                                 ckpt_dir=args.ckpt_dir)))
+    ds = pipe.dataset
+    print(f"series resident: {ds.nbytes_index() / 2**20:.1f} MiB "
+          f"(materialized would be {ds.nbytes_materialized() / 2**30:.2f} GiB)")
+    resumed = latest_step(args.ckpt_dir)
+    if resumed is not None:
+        print(f"resuming from step {resumed}")
 
     t0 = time.perf_counter()
-    state, history = run_training(
-        state=state, train_step=step, sampler=sampler,
-        batch_of_starts=lambda ids: jnp.asarray(ds.starts[ids]),
-        loop=TrainLoopConfig(epochs=epochs, log_every=20, ckpt_every=50,
-                             ckpt_dir=args.ckpt_dir),
-        eval_fn=eval_fn, checkpointer=ck,
-        start_epoch=start_step // sampler.steps_per_epoch,
-        start_step=start_step)
-    logs = [h for h in history if "loss" in h]
+    epochs = max(1, -(-args.steps // pipe.steps_per_epoch))
+    state, history = pipe.fit(epochs=epochs)
+    # step logs when log_every fired, else fall back to epoch summaries
+    logs = ([h for h in history if "loss" in h and "epoch_time_s" not in h]
+            or [h for h in history if "loss" in h])
     vals = [h for h in history if "val_mae" in h]
+    if not logs:  # history empty: resume already covered every step
+        print(f"nothing to train: checkpoint already at step {resumed}")
+        return
     print(f"wall {time.perf_counter() - t0:.1f}s  "
           f"train {logs[0]['loss']:.4f}->{logs[-1]['loss']:.4f}  "
-          f"val {vals[-1]['val_mae']:.4f}  ckpts={ck.steps()}")
+          f"val {vals[-1]['val_mae']:.4f}")
 
 
 if __name__ == "__main__":

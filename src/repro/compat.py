@@ -1,0 +1,76 @@
+"""JAX version shims (pinned 0.4.x ↔ 0.5+/0.6+).
+
+The repo pins jax 0.4.37 in the container, but the mesh API it targets grew in
+two steps upstream:
+
+- ``jax.sharding.AxisType`` (Auto/Explicit/Manual) only exists on 0.5+;
+- ``jax.make_mesh``'s ``axis_types=`` keyword likewise.
+
+Everything that builds a mesh goes through :func:`make_mesh` below, which
+forwards ``axis_types`` when the installed JAX understands it and silently
+drops it otherwise (0.4.x meshes are implicitly all-Auto, so dropping the
+argument preserves semantics).  ``AxisType`` is re-exported from JAX when
+available and stubbed with an equivalent enum when not, so call sites can
+spell ``AxisType.Auto`` unconditionally.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+    HAS_AXIS_TYPES = True
+except ImportError:  # jax 0.4.x: meshes are implicitly all-Auto
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    HAS_AXIS_TYPES = False
+
+
+def _make_mesh_accepts_axis_types() -> bool:
+    fn = getattr(jax, "make_mesh", None)
+    if fn is None:
+        return False
+    try:
+        return "axis_types" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # pragma: no cover - exotic builds
+        return False
+
+
+_AXIS_TYPES_KW = _make_mesh_accepts_axis_types()
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    axis_types: Sequence[AxisType] | None = None,
+    devices=None,
+) -> Mesh:
+    """``jax.make_mesh`` that works on every supported JAX.
+
+    ``axis_types`` is forwarded when the runtime supports it and dropped
+    otherwise; ``devices=None`` defers to JAX's own device selection.
+    """
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if axis_types is not None and _AXIS_TYPES_KW:
+        kw["axis_types"] = tuple(axis_types)
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+    # very old jax: build the device grid by hand
+    import numpy as np
+
+    devs = devices if devices is not None else jax.devices()
+    grid = np.asarray(devs).reshape(tuple(axis_shapes))
+    return Mesh(grid, tuple(axis_names))

@@ -72,6 +72,7 @@ class LocalBatchShuffleSampler:
     def __init__(self, window_ids: np.ndarray, batch_per_rank: int, shard: ShardInfo, *, seed: int = 0):
         ids = np.asarray(window_ids, dtype=np.int32)
         part = np.array_split(ids, shard.world)[shard.rank]
+        self.window_ids = ids
         self.batch = batch_per_rank
         self.shard = shard
         self.seed = seed
@@ -86,7 +87,17 @@ class LocalBatchShuffleSampler:
         return self.batches[order]
 
     def epoch_global(self, epoch: int) -> np.ndarray:
-        raise NotImplementedError  # assembled by the distributed launcher per-rank
+        """[steps, world*batch] rank-major assembly of every rank's epoch.
+
+        Feeds a single jitted SPMD step whose batch dim is sharded: column
+        block r is exactly what ``ShardInfo(r, world)``'s sampler yields, so
+        ``epoch_global(e).reshape(steps, world, batch)[:, r, :] ==
+        sampler_r.epoch(e)`` — the same contract GlobalShuffleSampler keeps.
+        """
+        grids = [type(self)(self.window_ids, self.batch,
+                            ShardInfo(r, self.shard.world), seed=self.seed).epoch(epoch)
+                 for r in range(self.shard.world)]
+        return np.concatenate(grids, axis=1)
 
 
 def local_shuffle_sampler(window_ids, batch_per_rank, shard, *, seed=0):

@@ -130,12 +130,14 @@ def _dot_flops(op: _Op, comp: _Computation) -> float:
     if not res:
         return 0.0
     out_elems = _shape_elems(res[0][1])
-    # contracting dims come from lhs shape + lhs_contracting_dims
-    mo = re.search(r"\b(?:dot|convolution)\(%?([\w.\-]+)", op.line)
+    # contracting dims come from lhs shape + lhs_contracting_dims; the HLO
+    # printer may type operands inline ("dot(f32[...] %lhs, ...)"), so pull
+    # the %-prefixed operand names rather than the first token after "dot(".
+    operands = _operand_names(op.line)
     mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
-    if mo is None:
-        return 0.0
-    lhs = comp.by_name.get(mo.group(1))
+    if not operands:
+        return 2.0 * out_elems
+    lhs = comp.by_name.get(operands[0])
     if lhs is None:
         return 2.0 * out_elems  # parameter operand — be conservative
     lhs_dims = _SHAPE_RE.findall(lhs.shape_str)
@@ -158,10 +160,10 @@ def _conv_flops(op: _Op, comp: _Computation) -> float:
     if not res:
         return 0.0
     out_elems = _shape_elems(res[0][1])
-    mo = re.search(r"convolution\(%?[\w.\-]+,\s*%?([\w.\-]+)", op.line)
-    if mo is None:
+    operands = _operand_names(op.line)
+    if len(operands) < 2:
         return 2.0 * out_elems
-    ker = comp.by_name.get(mo.group(1))
+    ker = comp.by_name.get(operands[1])
     if ker is None:
         return 2.0 * out_elems
     kd = _SHAPE_RE.findall(ker.shape_str)
@@ -175,10 +177,15 @@ def _conv_flops(op: _Op, comp: _Computation) -> float:
 
 
 def _operand_names(line: str) -> list[str]:
-    m = re.search(r"\w[\w\-.]*\(([^)]*)\)", line)
-    if not m:
-        return []
-    return re.findall(r"%([\w.\-]+)", m.group(1))
+    # The operand list is the first parenthesised group that references
+    # %-named values; earlier paren groups can be layout tile annotations
+    # in the result shape (e.g. "{1,0:T(8,128)}" on TPU HLO), which must
+    # be skipped or every op on such a line would appear operand-less.
+    for m in re.finditer(r"\w[\w\-.]*\(([^)]*)\)", line):
+        names = re.findall(r"%([\w.\-]+)", m.group(1))
+        if names:
+            return names
+    return []
 
 
 _MOVER_OPS = {"fusion", "dot", "convolution", "gather", "scatter",

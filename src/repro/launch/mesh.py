@@ -11,13 +11,15 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(*, model: int | None = None) -> Mesh:
@@ -25,8 +27,8 @@ def make_host_mesh(*, model: int | None = None) -> Mesh:
     n = len(jax.devices())
     model = model or 1
     assert n % model == 0, (n, model)
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((n // model, model), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
 
 
 def mesh_chips(mesh: Mesh) -> int:

@@ -4,7 +4,11 @@ Runs the paper's full workflow — synthetic data gen → index-batching
 preprocessing → GPU(accelerator)-index-batching placement → distributed-index-
 batching training with global shuffling — on whatever devices exist.  On the
 CPU container this trains the reduced configs for real; on a TPU slice the
-same entry point trains the full ones (mesh picked by ``--mesh``).
+same entry point trains the full ones.
+
+ST-GNN archs run through `repro.pipeline` (placement-aware: the sampler,
+series sharding and fused gather/step come from one definition); LM archs use
+the token-stream window path directly.
 
 Examples:
   python -m repro.launch.train --arch pgt-dcrnn-pems-all-la --nodes 200 \
@@ -25,17 +29,20 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core import (GlobalShuffleSampler, IndexDataset, LocalBatchShuffleSampler,
-                        ShardInfo, WindowSpec, gather_batch)
+                        Placement, ShardInfo, WindowSpec)
 from repro.data import (gaussian_adjacency, make_token_stream, make_traffic_series,
                         random_sensor_coords, transition_matrices)
 from repro.distributed import Checkpointer, latest_step, restore
-from repro.models import a3tgcn, dcrnn, pgt_dcrnn
+from repro.launch.mesh import make_host_mesh
+from repro.models import dcrnn, pgt_dcrnn
 from repro.models.lm import model as lm
 from repro.optim import AdamConfig, warmup_cosine
+from repro.pipeline import PipelineConfig, build_pipeline
 from repro.train.loop import TrainLoopConfig, init_train_state, make_train_step, run_training
 
 
-def _stgnn_setup(arch, args):
+def _train_stgnn(arch, args, adam, sched, loop: TrainLoopConfig):
+    """Full pipeline path: placement-aware sampler/sharding/fused step."""
     mcfg = arch.model
     if args.nodes:
         mcfg = dataclasses.replace(mcfg, num_nodes=args.nodes)
@@ -45,28 +52,35 @@ def _stgnn_setup(arch, args):
     series = make_traffic_series(args.entries, mcfg.num_nodes,
                                  mcfg.in_features, seed=args.seed, adjacency=adj)
     spec = WindowSpec(horizon=mcfg.horizon, input_len=mcfg.input_len)
-    ds = IndexDataset.from_raw(series, spec).to_device()
 
     mod = dcrnn if isinstance(mcfg, dcrnn.DCRNNConfig) else pgt_dcrnn
     params = mod.init(jax.random.PRNGKey(args.seed), mcfg)
 
-    def loss_fn(p, starts):
-        x, y = gather_batch(ds.series, starts, input_len=mcfg.input_len,
-                            horizon=mcfg.horizon)
+    def loss_fn(p, x, y):
         return mod.loss_fn(p, mcfg, supports, x, y), {}
 
-    def eval_fn(state):
-        ids = ds.val_windows[: args.batch * 4]
-        losses = []
-        for i in range(0, len(ids) - args.batch + 1, args.batch):
-            l, _ = loss_fn(state["params"], jnp.asarray(ds.starts[ids[i:i + args.batch]]))
-            losses.append(float(l))
-        return {"val_mae": float(np.mean(losses))} if losses else {}
+    mesh = make_host_mesh()
+    # --batch is the GLOBAL batch; the pipeline takes a per-rank size
+    from repro.core.distributed import dp_size
+    dp = max(dp_size(mesh), 1)
+    if args.batch % dp:
+        raise SystemExit(f"--batch {args.batch} not divisible by "
+                         f"data-parallel size {dp}")
+    pipe = build_pipeline(
+        series, spec, mesh, loss_fn, params,
+        PipelineConfig(batch_per_rank=args.batch // dp,
+                       placement=Placement(args.placement),
+                       gather=args.gather, seed=args.seed, adam=adam,
+                       schedule=sched, loop=loop))
+    if args.resume and loop.ckpt_dir:
+        step = latest_step(loop.ckpt_dir)
+        if step is not None:
+            print(f"resuming from step {step}")
+    return pipe.fit(resume=args.resume)
 
-    return params, loss_fn, eval_fn, ds
 
-
-def _lm_setup(arch, args):
+def _train_lm(arch, args, adam, sched, loop: TrainLoopConfig):
+    """Token-stream windows (nodes==1 case): y = shift(x), custom gather."""
     cfg = arch.smoke_config() if args.smoke else arch.lm
     stream = jnp.asarray(make_token_stream(args.entries, cfg.vocab, seed=args.seed))
     spec = WindowSpec(horizon=1, input_len=args.seq_len)
@@ -78,10 +92,25 @@ def _lm_setup(arch, args):
 
     def loss_fn(p, starts):
         toks, labels = lm_window_batch(ds.series, starts, seq_len=args.seq_len)
-        l, metrics = lm.loss_fn(p, cfg, toks, labels)
-        return l, metrics
+        return lm.loss_fn(p, cfg, toks, labels)
 
-    return params, loss_fn, None, ds
+    train_step = make_train_step(loss_fn, adam, sched)
+    state = init_train_state(params, adam)
+    sampler_cls = (GlobalShuffleSampler if args.shuffle == "global"
+                   else LocalBatchShuffleSampler)
+    sampler = sampler_cls(ds.train_windows, args.batch, ShardInfo(0, 1),
+                          seed=args.seed)
+    ckpt = Checkpointer(loop.ckpt_dir) if loop.ckpt_dir else None
+    start_step = 0
+    if args.resume and loop.ckpt_dir and latest_step(loop.ckpt_dir) is not None:
+        state, start_step = restore(loop.ckpt_dir, state)
+        print(f"resumed from step {start_step}")
+    return run_training(
+        state=state, train_step=train_step, sampler=sampler,
+        batch_of_starts=lambda s: jnp.asarray(ds.starts[s]),
+        loop=loop, eval_fn=None, checkpointer=ckpt,
+        start_epoch=start_step // sampler.steps_per_epoch,
+        start_step=start_step)
 
 
 def main() -> None:
@@ -96,7 +125,13 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true", help="reduced LM config")
-    ap.add_argument("--shuffle", default="global", choices=["global", "local-batch"])
+    ap.add_argument("--placement", default="replicated",
+                    choices=[p.value for p in Placement],
+                    help="ST-GNN dataset placement (pipeline)")
+    ap.add_argument("--gather", default="slice",
+                    choices=["slice", "take", "fused", "pallas"])
+    ap.add_argument("--shuffle", default="global", choices=["global", "local-batch"],
+                    help="LM sampler (ST-GNN samplers follow --placement)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
@@ -104,42 +139,26 @@ def main() -> None:
     args = ap.parse_args()
 
     arch = get_arch(args.arch)
-    if arch.family == "stgnn":
-        params, loss_fn, eval_fn, ds = _stgnn_setup(arch, args)
-    else:
-        params, loss_fn, eval_fn, ds = _lm_setup(arch, args)
-
     adam = AdamConfig(lr=args.lr)
     total = max(args.steps, 100)
     sched = lambda s: warmup_cosine(s, base_lr=args.lr, warmup_steps=total // 10,
                                     total_steps=total)
-    train_step = make_train_step(loss_fn, adam, sched)
-    state = init_train_state(params, adam)
-
-    shard = ShardInfo(0, 1)
-    sampler_cls = (GlobalShuffleSampler if args.shuffle == "global"
-                   else LocalBatchShuffleSampler)
-    sampler = sampler_cls(ds.train_windows, args.batch, shard, seed=args.seed)
-
-    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
-    start_epoch = start_step = 0
-    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
-        state, start_step = restore(args.ckpt_dir, state)
-        start_epoch = start_step // sampler.steps_per_epoch
-        print(f"resumed from step {start_step} (epoch {start_epoch})")
-
     loop = TrainLoopConfig(epochs=args.epochs, log_every=10,
                            ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+
     t0 = time.perf_counter()
-    state, history = run_training(
-        state=state, train_step=train_step, sampler=sampler,
-        batch_of_starts=lambda s: jnp.asarray(ds.starts[s]),
-        loop=loop, eval_fn=eval_fn, checkpointer=ckpt,
-        start_epoch=start_epoch, start_step=start_step)
+    if arch.family == "stgnn":
+        state, history = _train_stgnn(arch, args, adam, sched, loop)
+    else:
+        state, history = _train_lm(arch, args, adam, sched, loop)
     wall = time.perf_counter() - t0
     final = [h for h in history if "loss" in h]
-    print(f"done: {len(final)} logs, wall {wall:.1f}s, "
-          f"loss {final[0]['loss']:.4f} -> {final[-1]['loss']:.4f}")
+    if final:
+        print(f"done: {len(final)} logs, wall {wall:.1f}s, "
+              f"loss {final[0]['loss']:.4f} -> {final[-1]['loss']:.4f}")
+    else:
+        print(f"done: nothing to train (resumed past requested epochs), "
+              f"wall {wall:.1f}s")
     if args.history_out:
         with open(args.history_out, "w") as f:
             json.dump(history, f, indent=1)

@@ -1,0 +1,13 @@
+"""Placement-aware training pipeline (dataset placement + sampler + fused step)."""
+from repro.pipeline.gathers import GATHERS, resolve_gather
+from repro.pipeline.samplers import ShardAlignedBatchSampler
+from repro.pipeline.pipeline import Pipeline, PipelineConfig, build_pipeline
+
+__all__ = [
+    "Pipeline",
+    "PipelineConfig",
+    "build_pipeline",
+    "GATHERS",
+    "resolve_gather",
+    "ShardAlignedBatchSampler",
+]

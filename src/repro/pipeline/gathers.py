@@ -1,0 +1,34 @@
+"""Selectable window-gather implementations for the fused training step.
+
+Every variant has the same contract:
+``gather(series, starts, *, input_len, horizon) -> (x, y)`` with
+``x: [B, input_len, ...]`` and ``y: [B, horizon, ...]`` — bit-identical
+results, different lowerings:
+
+- ``slice``  — per-window ``dynamic_slice`` under ``vmap`` (the default).
+- ``take``   — one fused ``jnp.take`` over explicit index grids.
+- ``fused``  — one gather of the whole span, split into (x, y).
+- ``pallas`` — the fused span gather through the scalar-prefetch Pallas
+  kernel (``kernels/window_gather``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+from repro.core.batching import gather_batch, gather_batch_fused, gather_batch_take
+
+GATHERS: dict[str, Callable] = {
+    "slice": gather_batch,
+    "take": gather_batch_take,
+    "fused": gather_batch_fused,
+    "pallas": functools.partial(gather_batch_fused, use_pallas=True),
+}
+
+
+def resolve_gather(name: str) -> Callable:
+    try:
+        return GATHERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown gather {name!r}; expected one of {sorted(GATHERS)}") from None

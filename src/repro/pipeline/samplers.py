@@ -1,0 +1,100 @@
+"""Shard-aligned local batch sampler for the PARTITIONED placement.
+
+``series_sharding`` splits the resident series' TIME axis evenly across the
+data-parallel devices (``local_time_range``).  For the §5.4 communication-free
+contract to hold, each rank's sampled windows must lie inside the time range
+its device actually owns — a plain count-split of the train windows lands on
+different boundaries and silently turns local gathers into cross-shard ones.
+
+``ShardAlignedBatchSampler`` draws rank r's windows from
+``local_window_ids(entries, spec, r, world) ∩ train`` — the same definition
+the placement math uses — so gathers stay on-shard (halo windows excepted).
+Batch ORDER shuffles between epochs; partition content is fixed (local batch
+shuffling, Table 5).
+
+Alignment is only possible when every rank's local train-window count covers
+at least one batch; with the standard 70/10/20 contiguous split, ranks owning
+the val/test tail of the series may have none.  ``build_pipeline`` falls back
+to the contiguous count-split (``LocalBatchShuffleSampler``) in that case and
+the locality claim weakens to approximate — callers that need strict
+alignment should widen the train fraction (see ``benchmarks/fig9``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.distributed import local_window_ids
+from repro.core.sampler import _rng
+from repro.core.windows import WindowSpec
+
+
+class ShardAlignedBatchSampler:
+    """Per-rank fixed partitions aligned to ``local_time_range`` boundaries."""
+
+    def __init__(
+        self,
+        entries: int,
+        spec: WindowSpec,
+        train_ids: np.ndarray,
+        batch_per_rank: int,
+        world: int,
+        *,
+        seed: int = 0,
+        halo: bool = True,
+    ):
+        if spec.stride != 1:
+            raise ValueError("shard alignment requires stride=1 "
+                             "(window id == start step)")
+        train = np.asarray(train_ids, dtype=np.int32)
+        self.rank_ids = []
+        for r in range(world):
+            ids = local_window_ids(entries, spec, r, world, halo=halo)
+            self.rank_ids.append(ids[np.isin(ids, train)])
+        counts = [len(ids) for ids in self.rank_ids]
+        self.batch = batch_per_rank
+        self.world = world
+        self.seed = seed
+        # Batch CONTENT is fixed once per rank (local batch shuffling); the
+        # lock-step step count is set by the smallest rank.  Time-aligned
+        # shards hold unequal train-window counts, so larger ranks draw a
+        # cyclically-rotating window over a fixed permutation of their
+        # batches each epoch: every batch is guaranteed to be visited at
+        # least once every ceil(n_batches / steps_per_epoch) epochs instead
+        # of the surplus being truncated away permanently.
+        self.rank_batches = []
+        for ids in self.rank_ids:
+            n_b = len(ids) // batch_per_rank
+            self.rank_batches.append(
+                ids[:n_b * batch_per_rank].reshape(n_b, batch_per_rank))
+        self.steps_per_epoch = min(b.shape[0] for b in self.rank_batches)
+        if self.steps_per_epoch == 0:
+            raise ValueError(
+                f"rank partition too small for one batch (counts={counts}); "
+                "widen the train split or use the count-split sampler")
+
+    def epoch_rank(self, epoch: int, rank: int) -> np.ndarray:
+        """[steps, batch] window ids for one rank, deterministic in
+        (seed, epoch) — no communication, every rank derives the schedule.
+
+        Selection: a cyclic window of ``steps_per_epoch`` entries over a
+        FIXED (per-rank) permutation of the rank's batches, advanced by
+        ``steps_per_epoch`` each epoch — guaranteed full coverage of uneven
+        partitions.  Order within the epoch reshuffles per (seed, epoch).
+        """
+        batches = self.rank_batches[rank]
+        n_b = batches.shape[0]
+        steps = self.steps_per_epoch
+        # fixed per-rank permutation (epoch-independent; rank offsets the seed)
+        base = _rng(self.seed, 1_000_003 + rank).permutation(n_b)
+        start = (epoch * steps) % n_b
+        chosen = base[np.arange(start, start + steps) % n_b]
+        order = _rng(self.seed, epoch).permutation(steps)
+        return batches[chosen[order]]
+
+    def epoch(self, epoch: int) -> np.ndarray:
+        return self.epoch_rank(epoch, 0)
+
+    def epoch_global(self, epoch: int) -> np.ndarray:
+        """[steps, world*batch] rank-major assembly for the SPMD step."""
+        return np.concatenate(
+            [self.epoch_rank(epoch, r) for r in range(self.world)], axis=1)

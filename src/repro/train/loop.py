@@ -40,6 +40,18 @@ class TrainLoopConfig:
     donate: bool = True
 
 
+def zero_grads_like(params, grad_dtype: str | None):
+    """Zero tree for microbatch gradient accumulation.
+
+    Each leaf takes the dtype the gradients will actually have — the
+    ``grad_dtype`` compression target when set, else the param leaf's own
+    dtype.  (A float32 default would silently up-cast bf16/f16 gradient
+    trees through ``jnp.add``'s promotion inside the scan.)
+    """
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, grad_dtype or p.dtype), params)
+
+
 def make_train_step(
     loss_fn: Callable[[Any, Any], tuple[jnp.ndarray, dict]],
     adam: AdamConfig,
@@ -79,8 +91,7 @@ def make_train_step(
                 return (loss_a + loss,
                         jax.tree.map(jnp.add, grads_a, grads)), None
 
-            zero_g = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, grad_dtype or jnp.float32), params)
+            zero_g = zero_grads_like(params, grad_dtype)
             (loss, grads), _ = jax.lax.scan(
                 acc_step, (jnp.zeros(()), zero_g), jnp.arange(microbatches))
             loss = loss / microbatches
@@ -131,9 +142,14 @@ def run_training(
     for epoch in range(start_epoch, loop.epochs):
         grid = sampler.epoch_global(epoch)
         t0 = time.perf_counter()
-        # resume mid-epoch: skip steps already done
-        done_in_epoch = global_step - epoch * sampler.steps_per_epoch
-        for i in range(max(done_in_epoch, 0), grid.shape[0]):
+        # Resume mid-epoch: skip steps already done.  Clamp to [0, steps] —
+        # a start_step beyond this epoch (resume past a partially-logged
+        # epoch with a stale start_epoch) must skip it wholesale, not index
+        # with a done-count larger than the grid.
+        done_in_epoch = min(max(global_step - epoch * sampler.steps_per_epoch, 0),
+                            grid.shape[0])
+        metrics = None
+        for i in range(done_in_epoch, grid.shape[0]):
             state, metrics = train_step(state, batch_of_starts(grid[i]))
             global_step += 1
             if loop.log_every and global_step % loop.log_every == 0:
@@ -142,6 +158,8 @@ def run_training(
             if (checkpointer is not None and loop.ckpt_every
                     and global_step % loop.ckpt_every == 0):
                 checkpointer.save(state, step=global_step)
+        if metrics is None:
+            continue  # every step was already done on resume: nothing to log
         epoch_metrics = {"epoch": epoch, "epoch_time_s": time.perf_counter() - t0,
                          "step": global_step,
                          "loss": float(metrics["loss"])}

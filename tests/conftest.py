@@ -1,10 +1,114 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the single real
-CPU device; only repro.launch.dryrun forces 512 placeholder devices."""
+CPU device; only repro.launch.dryrun forces 512 placeholder devices.
+
+Also installs a seeded-example fallback for ``hypothesis`` so the property
+suites (`test_windows.py`, `test_sampler.py`, `test_kernels.py`,
+`test_flash_attention.py`, `test_index_batching.py`) run on a bare pytest
+install: when the real library is absent, ``@given`` draws a fixed number of
+deterministic examples (seeded from the test name) from mini-strategies that
+cover the subset of the API these tests use.  With hypothesis installed the
+real library is used untouched.
+"""
+import sys
+import types
+import zlib
+
 import jax
 import numpy as np
 import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+# Cap for the fallback: property tests declare up to 200 examples, which the
+# real hypothesis shrinks/reuses efficiently; the seeded fallback just replays
+# N deterministic draws, so keep N small enough for a fast CI suite.
+_FALLBACK_MAX_EXAMPLES = 25
+
+
+def _install_hypothesis_fallback() -> None:
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def example(self, rng):
+            return self._draw_fn(rng)
+
+    def integers(lo, hi):
+        return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+    def floats(lo, hi, **_):
+        return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+    def sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: items[int(rng.integers(0, len(items)))])
+
+    def lists(elem, *, min_size=0, max_size=None):
+        hi = min_size + 8 if max_size is None else max_size
+
+        def draw(rng):
+            n = int(rng.integers(min_size, hi + 1))
+            return [elem.example(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    def composite(fn):
+        def build(*args, **kwargs):
+            return _Strategy(
+                lambda rng: fn(lambda s: s.example(rng), *args, **kwargs))
+
+        return build
+
+    def settings(*, max_examples=20, deadline=None, **_):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            declared = getattr(fn, "_fallback_max_examples", 20)
+            n_examples = min(declared, _FALLBACK_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+
+            def wrapper(*args, **kwargs):
+                rng = np.random.default_rng(seed)
+                for _ in range(n_examples):
+                    drawn = tuple(s.example(rng) for s in arg_strategies)
+                    drawn_kw = {k: s.example(rng)
+                                for k, s in kw_strategies.items()}
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+
+            # NOT functools.wraps: copying __wrapped__ would make pytest
+            # resolve the original signature and demand fixtures for the
+            # drawn parameters.
+            for attr in ("__name__", "__qualname__", "__doc__", "__module__",
+                         "pytestmark"):
+                if hasattr(fn, attr):
+                    setattr(wrapper, attr, getattr(fn, attr))
+            return wrapper
+
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    strategies.floats = floats
+    strategies.sampled_from = sampled_from
+    strategies.lists = lists
+    strategies.composite = composite
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_fallback()
 
 
 @pytest.fixture(scope="session")

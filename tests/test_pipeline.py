@@ -1,0 +1,209 @@
+"""The `repro.pipeline` contract, per placement:
+
+(a) the sampler/sharding pairing instantiated by `build_pipeline` matches the
+    definition in `core/distributed.py`'s docstring;
+(b) a 2-epoch CPU run is bit-identical to a kill-and-resume run through the
+    checkpointer (deterministic (seed, epoch) sampling + step-granular
+    checkpoints);
+(c) every selectable gather reconstructs the same batches from the same
+    starts.
+
+Plus regression tests for the train-loop resume fixes and the microbatch
+accumulator dtype policy.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Placement, WindowSpec
+from repro.core.distributed import data_axes, local_time_range
+from repro.data import make_traffic_series
+from repro.launch.mesh import make_host_mesh
+from repro.optim import AdamConfig
+from repro.pipeline import GATHERS, PipelineConfig, build_pipeline
+from repro.train import TrainLoopConfig
+from repro.train.loop import (init_train_state, make_train_step, run_training,
+                              zero_grads_like)
+
+ENTRIES, NODES, HORIZON, B, WORLD = 120, 3, 2, 4, 2
+SPEC = WindowSpec(horizon=HORIZON, input_len=HORIZON)
+
+EXPECTED_SAMPLER = {
+    Placement.REPLICATED: "GlobalShuffleSampler",
+    Placement.PARTITIONED: "ShardAlignedBatchSampler",
+    Placement.ONDEMAND: "GlobalShuffleSampler",
+}
+
+
+def _params():
+    return {"w": jnp.full((NODES, 2), 0.1, jnp.float32)}
+
+
+def _loss_fn(p, x, y):
+    pred = x[:, -1] * p["w"]  # [B, N, F]
+    return jnp.mean((pred - y[:, 0]) ** 2), {}
+
+
+def _pipe(placement, *, ckpt_dir=None, gather="slice", epochs=2):
+    return build_pipeline(
+        make_traffic_series(ENTRIES, NODES), SPEC, make_host_mesh(),
+        _loss_fn, _params(),
+        PipelineConfig(
+            batch_per_rank=B, placement=placement, world=WORLD, gather=gather,
+            seed=11, adam=AdamConfig(lr=1e-2),
+            loop=TrainLoopConfig(epochs=epochs, log_every=0,
+                                 ckpt_dir=ckpt_dir)))
+
+
+# ------------------------------------------------------- (a) placement pairing
+@pytest.mark.parametrize("placement", list(Placement))
+def test_sampler_sharding_pairing(placement):
+    pipe = _pipe(placement)
+    desc = pipe.describe()
+    assert desc["sampler"] == EXPECTED_SAMPLER[placement]
+
+    spec = desc["series_spec"]
+    if placement is Placement.REPLICATED:
+        # full series on every device: PartitionSpec() — no sharded axis
+        assert spec == ()
+    else:
+        # PARTITIONED and ONDEMAND shard the TIME axis over the data axes
+        first = spec[0]
+        axes = set(first) if isinstance(first, tuple) else {first}
+        assert axes == set(data_axes(pipe.mesh))
+
+    grid = pipe.sampler.epoch_global(0)
+    assert grid.shape == (pipe.steps_per_epoch, WORLD * B)
+    if placement is Placement.PARTITIONED:
+        # rank r's draws must start inside the time range of the series
+        # shard rank r's device actually owns (local gathers, §5.4) — the
+        # same boundaries series_sharding induces (local_time_range)
+        blocks = grid.reshape(-1, WORLD, B)
+        for r in range(WORLD):
+            lo, hi = local_time_range(ENTRIES, r, WORLD)
+            assert blocks[:, r, :].min() >= lo
+            assert blocks[:, r, :].max() < hi
+        # batch CONTENT is fixed (local batch shuffling): every drawn batch
+        # in any epoch is one of the rank's pre-built batches; only the
+        # choice/order rotates with the epoch
+        for epoch in (0, 1):
+            b1 = pipe.sampler.epoch_global(epoch).reshape(-1, WORLD, B)
+            for r in range(WORLD):
+                fixed = {tuple(row) for row in pipe.sampler.rank_batches[r]}
+                assert {tuple(row) for row in b1[:, r, :]} <= fixed
+        # cyclic rotation: an uneven rank's surplus batches are all visited
+        # within ceil(n_batches / steps) epochs (no permanent truncation)
+        for r in range(WORLD):
+            fixed = {tuple(row) for row in pipe.sampler.rank_batches[r]}
+            n_b = pipe.sampler.rank_batches[r].shape[0]
+            need = -(-n_b // pipe.steps_per_epoch)
+            seen = set()
+            for e in range(need):
+                rows = pipe.sampler.epoch_global(e).reshape(-1, WORLD, B)[:, r, :]
+                seen |= {tuple(row) for row in rows}
+            assert seen == fixed
+    else:
+        # global shuffling: different epochs draw different permutations
+        assert not np.array_equal(grid, pipe.sampler.epoch_global(1))
+
+
+# --------------------------------------------- (b) kill-and-resume determinism
+@pytest.mark.parametrize("placement", list(Placement))
+def test_resume_bit_identical(placement, tmp_path):
+    straight, _ = _pipe(placement).fit(epochs=2, eval_fn=None)
+
+    ckpt = str(tmp_path / placement.value)
+    killed = _pipe(placement, ckpt_dir=ckpt)
+    killed.fit(epochs=1, eval_fn=None)  # "killed" after epoch 0's checkpoint
+    resumed, history = _pipe(placement, ckpt_dir=ckpt).fit(epochs=2,
+                                                           eval_fn=None)
+    # only epoch 1 ran after the resume
+    assert [h["epoch"] for h in history if "epoch_time_s" in h] == [1]
+    for a, b in zip(jax.tree.leaves(straight), jax.tree.leaves(resumed)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------- (c) gather agreement
+@pytest.mark.parametrize("placement", list(Placement))
+def test_gather_variants_agree_on_pipeline_batches(placement):
+    pipe = _pipe(placement)
+    starts = pipe.batch_of_starts(pipe.sampler.epoch_global(0)[0])
+    results = {
+        name: fn(pipe.dataset.series, starts,
+                 input_len=SPEC.in_len, horizon=SPEC.horizon)
+        for name, fn in GATHERS.items()
+    }
+    ref_x, ref_y = results.pop("slice")
+    assert ref_x.shape == (WORLD * B, SPEC.in_len, NODES, 2)
+    for name, (x, y) in results.items():
+        assert np.array_equal(np.asarray(ref_x), np.asarray(x)), name
+        assert np.array_equal(np.asarray(ref_y), np.asarray(y)), name
+
+
+# ------------------------------------------------- train-loop resume hardening
+class _StubSampler:
+    steps_per_epoch = 4
+
+    def epoch_global(self, epoch):
+        return np.arange(4)[:, None] + 10 * epoch
+
+
+def test_resume_past_partial_epoch_skips_cleanly():
+    """start_step beyond an epoch must skip it wholesale: no over-large done
+    count, no unbound-metrics crash on the fully-skipped epoch's summary."""
+    ran = []
+
+    def train_step(state, batch):
+        ran.append(int(batch[0]))
+        return state, {"loss": jnp.zeros(())}
+
+    _, history = run_training(
+        state={}, train_step=train_step, sampler=_StubSampler(),
+        batch_of_starts=lambda row: row,
+        loop=TrainLoopConfig(epochs=2, log_every=0),
+        start_epoch=0, start_step=6)
+    # epoch 0 (4 steps) fully done; epoch 1 resumes at its step 2
+    assert ran == [12, 13]
+    epochs_logged = [h["epoch"] for h in history if "epoch_time_s" in h]
+    assert epochs_logged == [1]
+
+
+def test_resume_mid_epoch_runs_remaining_steps():
+    ran = []
+
+    def train_step(state, batch):
+        ran.append(int(batch[0]))
+        return state, {"loss": jnp.zeros(())}
+
+    run_training(
+        state={}, train_step=train_step, sampler=_StubSampler(),
+        batch_of_starts=lambda row: row,
+        loop=TrainLoopConfig(epochs=1, log_every=0),
+        start_epoch=0, start_step=3)
+    assert ran == [3]
+
+
+# --------------------------------------------- microbatch accumulator dtype
+def test_zero_grads_match_gradient_dtypes():
+    params = {"a": jnp.zeros((2,), jnp.bfloat16), "b": jnp.zeros((3,), jnp.float32)}
+    z = zero_grads_like(params, None)
+    assert z["a"].dtype == jnp.bfloat16 and z["b"].dtype == jnp.float32
+    z16 = zero_grads_like(params, "bfloat16")
+    assert z16["a"].dtype == jnp.bfloat16 and z16["b"].dtype == jnp.bfloat16
+
+
+def test_microbatched_step_keeps_bf16_grad_tree():
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+
+    def loss_fn(p, batch):
+        return jnp.sum(p["w"].astype(jnp.float32)) * jnp.sum(batch), {}
+
+    adam = AdamConfig(lr=1e-2, grad_clip=None)
+    step = make_train_step(loss_fn, adam, lambda s: 1e-2, microbatches=2,
+                           donate=False)
+    state, metrics = step(init_train_state(params, adam),
+                          jnp.ones((4,), jnp.float32))
+    assert state["params"]["w"].dtype == jnp.bfloat16
+    assert np.isfinite(float(metrics["loss"]))
