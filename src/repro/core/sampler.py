@@ -12,6 +12,13 @@ partition is shuffled between epochs (Table 5 shows accuracy parity).
 Samplers are deterministic functions of (seed, epoch) so that restarts resume
 mid-epoch bit-identically (fault tolerance) and all SPMD ranks agree on the
 permutation without communicating.
+
+The first-class primitive is ``feed(rank, epoch) -> [steps, batch_per_rank]``:
+the per-process index feed a real multi-host launch hands to rank ``rank``.
+``epoch(epoch)`` is this rank's own feed; ``epoch_global(epoch)`` is the
+single-host assembly of the per-rank feed columns (rank-major), kept for the
+lock-step SPMD simulation — ``concat([feed(r, e) for r in ranks], axis=1) ==
+epoch_global(e)`` is the contract the pipeline tests pin down.
 """
 from __future__ import annotations
 
@@ -51,16 +58,23 @@ class GlobalShuffleSampler:
             raise ValueError(
                 f"{len(self.window_ids)} windows < global batch {global_batch}")
 
-    def epoch(self, epoch: int) -> np.ndarray:
-        """[steps, batch_per_rank] window ids for this rank."""
+    def feed(self, rank: int, epoch: int) -> np.ndarray:
+        """[steps, batch_per_rank] window ids for ``rank`` — the per-process
+        feed.  Any rank derives any feed from (seed, epoch) alone, so SPMD
+        workers never communicate about the schedule."""
         perm = _rng(self.seed, epoch).permutation(self.window_ids)
         n = self.steps_per_epoch * self.batch * self.shard.world
         grid = perm[:n].reshape(self.steps_per_epoch, self.shard.world, self.batch)
-        return grid[:, self.shard.rank, :]
+        return grid[:, rank, :]
+
+    def epoch(self, epoch: int) -> np.ndarray:
+        """[steps, batch_per_rank] window ids for this rank."""
+        return self.feed(self.shard.rank, epoch)
 
     def epoch_global(self, epoch: int) -> np.ndarray:
-        """[steps, world*batch] — the whole global batch per step, rank-major.
-        This is what feeds a single jitted SPMD step whose batch dim is sharded."""
+        """[steps, world*batch] — the whole global batch per step, rank-major:
+        the single-host assembly of the per-rank ``feed`` columns.  This is
+        what feeds a single jitted SPMD step whose batch dim is sharded."""
         perm = _rng(self.seed, epoch).permutation(self.window_ids)
         n = self.steps_per_epoch * self.batch * self.shard.world
         return perm[:n].reshape(self.steps_per_epoch, self.shard.world * self.batch)
@@ -71,33 +85,38 @@ class LocalBatchShuffleSampler:
 
     def __init__(self, window_ids: np.ndarray, batch_per_rank: int, shard: ShardInfo, *, seed: int = 0):
         ids = np.asarray(window_ids, dtype=np.int32)
-        part = np.array_split(ids, shard.world)[shard.rank]
+        parts = np.array_split(ids, shard.world)
         self.window_ids = ids
         self.batch = batch_per_rank
         self.shard = shard
         self.seed = seed
-        self.steps_per_epoch = min(len(p) for p in np.array_split(ids, shard.world)) // batch_per_rank
+        self.steps_per_epoch = min(len(p) for p in parts) // batch_per_rank
         if self.steps_per_epoch == 0:
             raise ValueError("partition smaller than one batch")
         n = self.steps_per_epoch * batch_per_rank
-        self.batches = part[:n].reshape(self.steps_per_epoch, batch_per_rank)
+        self._rank_batches = [p[:n].reshape(self.steps_per_epoch, batch_per_rank)
+                              for p in parts]
+        self.batches = self._rank_batches[shard.rank]
+
+    def feed(self, rank: int, epoch: int) -> np.ndarray:
+        """[steps, batch] for ``rank``: its fixed partition's batches in the
+        (seed, epoch) order — identical on every host that derives it."""
+        order = _rng(self.seed, epoch).permutation(self.steps_per_epoch)
+        return self._rank_batches[rank][order]
 
     def epoch(self, epoch: int) -> np.ndarray:
-        order = _rng(self.seed, epoch).permutation(self.steps_per_epoch)
-        return self.batches[order]
+        return self.feed(self.shard.rank, epoch)
 
     def epoch_global(self, epoch: int) -> np.ndarray:
-        """[steps, world*batch] rank-major assembly of every rank's epoch.
+        """[steps, world*batch] rank-major assembly of every rank's feed.
 
         Feeds a single jitted SPMD step whose batch dim is sharded: column
-        block r is exactly what ``ShardInfo(r, world)``'s sampler yields, so
+        block r is exactly ``feed(r, epoch)``, so
         ``epoch_global(e).reshape(steps, world, batch)[:, r, :] ==
-        sampler_r.epoch(e)`` — the same contract GlobalShuffleSampler keeps.
+        feed(r, e)`` — the same contract GlobalShuffleSampler keeps.
         """
-        grids = [type(self)(self.window_ids, self.batch,
-                            ShardInfo(r, self.shard.world), seed=self.seed).epoch(epoch)
-                 for r in range(self.shard.world)]
-        return np.concatenate(grids, axis=1)
+        return np.concatenate(
+            [self.feed(r, epoch) for r in range(self.shard.world)], axis=1)
 
 
 def local_shuffle_sampler(window_ids, batch_per_rank, shard, *, seed=0):
@@ -105,8 +124,8 @@ def local_shuffle_sampler(window_ids, batch_per_rank, shard, *, seed=0):
     included for the Table-5 comparison axis."""
 
     class _S(LocalBatchShuffleSampler):
-        def epoch(self, epoch: int) -> np.ndarray:
-            flat = self.batches.reshape(-1)
+        def feed(self, rank: int, epoch: int) -> np.ndarray:
+            flat = self._rank_batches[rank].reshape(-1)
             perm = _rng(self.seed, epoch).permutation(flat)
             return perm.reshape(self.steps_per_epoch, self.batch)
 

@@ -1,5 +1,8 @@
-from repro.distributed.checkpoint import Checkpointer, latest_step, restore
-from repro.distributed.elastic import ElasticPlan, HeartbeatMonitor, plan_remesh
+from repro.distributed.checkpoint import (Checkpointer, checkpoint_meta,
+                                          latest_step, restore)
+from repro.distributed.elastic import (ElasticPlan, HeartbeatMonitor,
+                                       plan_remesh, scale_batch_or_steps)
 
-__all__ = ["Checkpointer", "restore", "latest_step", "HeartbeatMonitor",
-           "plan_remesh", "ElasticPlan"]
+__all__ = ["Checkpointer", "restore", "latest_step", "checkpoint_meta",
+           "HeartbeatMonitor", "plan_remesh", "ElasticPlan",
+           "scale_batch_or_steps"]

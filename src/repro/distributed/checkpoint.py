@@ -82,17 +82,22 @@ class Checkpointer:
         self._error: BaseException | None = None
 
     # ------------------------------------------------------------------- save
-    def save(self, state: Any, *, step: int) -> None:
+    def save(self, state: Any, *, step: int, meta: dict | None = None) -> None:
+        """``meta``: JSON-serialisable run coordinates stored in the manifest
+        (e.g. the elastic engine's {epoch, done_in_epoch}) — read back with
+        :func:`checkpoint_meta` so a restart into a topology with a different
+        steps_per_epoch can still resume at the same (epoch, step)."""
         self.wait()  # one in-flight write at a time
         flat = _flatten(state)  # device->host snapshot happens HERE, synchronously
         if self.async_write:
             self._thread = threading.Thread(
-                target=self._write, args=(flat, step), daemon=True)
+                target=self._write, args=(flat, step, meta), daemon=True)
             self._thread.start()
         else:
-            self._write(flat, step)
+            self._write(flat, step, meta)
 
-    def _write(self, flat: dict[str, np.ndarray], step: int) -> None:
+    def _write(self, flat: dict[str, np.ndarray], step: int,
+               meta: dict | None = None) -> None:
         try:
             final = os.path.join(self.dir, f"step_{step:010d}")
             tmp = tempfile.mkdtemp(prefix=f".step_{step}-", dir=self.dir)
@@ -100,6 +105,7 @@ class Checkpointer:
             np.savez(arrays_path, **flat)
             manifest = {
                 "step": step,
+                "meta": meta or {},
                 "format": 1,
                 "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                            for k, v in flat.items()},
@@ -135,6 +141,16 @@ class Checkpointer:
                     and os.path.exists(os.path.join(self.dir, name, "manifest.json")):
                 out.append(int(name.split("_")[1]))
         return sorted(out)
+
+
+def checkpoint_meta(directory: str, *, step: int | None = None) -> dict:
+    """The run coordinates saved alongside a checkpoint (empty when absent)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    with open(os.path.join(directory, f"step_{step:010d}", "manifest.json")) as f:
+        return json.load(f).get("meta") or {}
 
 
 def latest_step(directory: str) -> int | None:

@@ -128,7 +128,9 @@ def scale_batch_or_steps(global_batch: int, old_dp: int, new_dp: int,
     Returns (per_worker_batch, new_global_batch)."""
     per = global_batch // old_dp
     if keep_global_batch:
-        # distribute remainder by rounding up, trainer trims the final microbatch
+        # Distribute the remainder by rounding up: SPMD batches are uniform
+        # per rank, so the new global batch is per_new * new_dp — up to
+        # new_dp − 1 windows LARGER than the old one (no ragged trim).
         per_new = -(-global_batch // new_dp)
         return per_new, per_new * new_dp
     return per, per * new_dp

@@ -1,9 +1,10 @@
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
-The ``os.environ`` line below MUST run before any other import: jax locks the
-device count on first init, and the production meshes need 512 placeholder
-host devices.  (Set here, in the module, NOT globally — smoke tests and
-benches see 1 device.)
+``main()`` forces 512 placeholder host devices FIRST THING — jax locks the
+device count on first backend init, and the production meshes need them.
+The override lives in main(), not at module scope: this module is also
+imported as a library (``collective_bytes``, ``partitioned_halo_evidence``)
+by tests and notebooks, which must keep their own device count.
 
 Per cell this proves the distribution config is coherent with no hardware:
 ``jit(step, in_shardings, out_shardings).lower(*ShapeDtypeStructs).compile()``
@@ -15,7 +16,6 @@ Usage:
   python -m repro.launch.dryrun --all --out results/dryrun  # full matrix
 """
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
@@ -70,6 +70,87 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
     out["total"] = sum(out[k] for k in _COLLECTIVES)
     out["counts"] = counts
     return out
+
+
+def partitioned_halo_evidence(mesh=None, *, entries: int = 256, nodes: int = 4,
+                              features: int = 2, global_batch: int = 16,
+                              input_len: int = 3, horizon: int = 3) -> dict:
+    """Collective-bytes evidence for the PARTITIONED ``halo`` knob.
+
+    ``halo=False`` (``PipelineConfig(halo=False)``) confines every sampled
+    window to the series shard its rank's device owns, so the step lowers as
+    a shard_map whose gathers are provably local — the compiled program's
+    ONLY collective is the gradient all-reduce.  ``halo=True`` windows may
+    spill ``span−1`` steps into the next shard, which forces the global-index
+    lowering and materialises an all-gather of the resident series.
+
+    Compiles both lowerings on ``mesh`` (default: the host mesh) against
+    abstract shapes and returns their per-device collective-byte tables plus
+    ``data_bytes`` = everything except the gradient all-reduce.
+    """
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.batching import gather_batch_fused
+    from repro.launch.mesh import make_host_mesh, shrink_mesh
+
+    if mesh is None:
+        # Cap the default at 8 data slots: the dryrun CLI forces 512 host
+        # devices, which the small evidence shapes cannot divide.
+        mesh = shrink_mesh(make_host_mesh(), 8)
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    all_axes = tuple(mesh.axis_names)
+    series_sh = NamedSharding(mesh, P(dp))
+    batch_sh = NamedSharding(mesh, P(dp))
+    rep = NamedSharding(mesh, P())
+
+    def loss(w, series, starts):
+        x, y = gather_batch_fused(series, starts, input_len=input_len,
+                                  horizon=horizon)
+        return jnp.mean((x * w).sum(-1) ** 2) + jnp.mean(y)
+
+    def step_global(w, series, starts):
+        return jax.value_and_grad(loss)(w, series, starts)
+
+    # Mirrors engine._shard_local_gather: inside the shard, global starts
+    # become shard-local offsets (start − shard origin) before gathering.
+    dp_total = 1
+    for a in dp:
+        dp_total *= int(mesh.shape[a])
+    shard_len = entries // max(dp_total, 1)
+
+    def body(w, series_shard, starts_shard):
+        lo = jax.lax.axis_index(dp[0]) * shard_len
+        l, g = jax.value_and_grad(loss)(w, series_shard, starts_shard - lo)
+        return jax.lax.pmean(l, all_axes), jax.lax.pmean(g, all_axes)
+
+    step_local = shard_map(body, mesh=mesh,
+                           in_specs=(P(), P(dp), P(dp)),
+                           out_specs=(P(), P()), check_rep=False)
+
+    sds = jax.ShapeDtypeStruct
+    args = (sds((features,), jnp.float32),
+            sds((entries, nodes, features), jnp.float32),
+            sds((global_batch,), jnp.int32))
+
+    def compile_and_count(fn):
+        compiled = jax.jit(fn, in_shardings=(rep, series_sh, batch_sh),
+                           out_shardings=(rep, rep)).lower(*args).compile()
+        coll = collective_bytes(compiled.as_text())
+        coll["data_bytes"] = coll["total"] - coll["all-reduce"]
+        return coll
+
+    return {
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "dims": {"entries": entries, "nodes": nodes, "features": features,
+                 "global_batch": global_batch, "input_len": input_len,
+                 "horizon": horizon},
+        # halo=False contract: shard-local gathers (shard_map lowering)
+        "halo_false": compile_and_count(step_local),
+        # halo=True upper bound: global-index gathers over the sharded series
+        "halo_true": compile_and_count(step_global),
+    }
 
 
 def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
@@ -145,6 +226,9 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
 
 
 def main() -> None:
+    # Must precede the first backend init (jax.devices()/device_put/...);
+    # imports above only bind the jax module and do not lock the count.
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
@@ -154,8 +238,25 @@ def main() -> None:
     ap.add_argument("--placement", default="replicated",
                     choices=["replicated", "partitioned", "ondemand"],
                     help="ST-GNN series placement")
+    ap.add_argument("--halo-evidence", action="store_true",
+                    help="compile the PARTITIONED step with shard-local "
+                         "(halo=False) vs global-index (halo=True) gathers "
+                         "and report per-device collective bytes")
     ap.add_argument("--out", default=None, help="write JSON records here")
     args = ap.parse_args()
+
+    if args.halo_evidence:
+        rec = partitioned_halo_evidence()
+        print(json.dumps(rec, indent=1))
+        if args.out:
+            import os as _os
+            _os.makedirs(_os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(rec, f, indent=1)
+        df, dt = rec["halo_false"]["data_bytes"], rec["halo_true"]["data_bytes"]
+        print(f"halo=False data-collective bytes/device: {df} "
+              f"(communication-free: {df == 0}); halo=True: {dt}")
+        return
 
     from repro.launch.specs import all_cells
 

@@ -31,6 +31,21 @@ def make_host_mesh(*, model: int | None = None) -> Mesh:
                      axis_types=(AxisType.Auto, AxisType.Auto))
 
 
+def shrink_mesh(mesh: Mesh, new_dp: int) -> Mesh:
+    """Largest sub-mesh with ``new_dp`` data-parallel slots, model axis whole.
+
+    The elastic engine calls this after ``plan_remesh`` shrinks the data
+    axis.  When the physical device pool is already at or below the target
+    (simulated worlds on a small host mesh), the mesh is returned unchanged —
+    the *logical* world still shrinks in the sampler/config.
+    """
+    model = int(mesh.shape.get("model", 1))
+    devs = np.asarray(mesh.devices).reshape(-1, model)
+    if new_dp >= devs.shape[0]:
+        return mesh
+    return Mesh(devs[:new_dp], ("data", "model"))
+
+
 def mesh_chips(mesh: Mesh) -> int:
     return int(np.prod(list(mesh.shape.values())))
 

@@ -6,15 +6,23 @@ batching training with global shuffling — on whatever devices exist.  On the
 CPU container this trains the reduced configs for real; on a TPU slice the
 same entry point trains the full ones.
 
-ST-GNN archs run through `repro.pipeline` (placement-aware: the sampler,
-series sharding and fused gather/step come from one definition); LM archs use
-the token-stream window path directly.
+Every arch runs through `repro.pipeline` (placement-aware: the sampler,
+series sharding and fused gather/step come from one definition).  LM archs
+use the pipeline's `lm` gather (token-stream windows, y = shift(x)).
+
+Multi-host: call with `--init-distributed` under a jax.distributed-capable
+launcher (env-configured coordinator) and each process trains from its own
+per-rank index feed (`DataPlane.feed(jax.process_index(), epoch)`) — no host
+ever materialises the global index grid.  `--elastic` attaches the
+heartbeat/re-mesh policy so worker loss shrinks the data axis and resumes
+from the latest checkpoint instead of killing the run.
 
 Examples:
   python -m repro.launch.train --arch pgt-dcrnn-pems-all-la --nodes 200 \
       --entries 2000 --epochs 3 --batch 32
   python -m repro.launch.train --arch qwen1.5-4b --smoke --steps 100
-  python -m repro.launch.train --arch dcrnn-pems --placement partitioned ...
+  python -m repro.launch.train --arch dcrnn-pems --placement partitioned \
+      --elastic --ckpt-dir /tmp/ck ...
 """
 from __future__ import annotations
 
@@ -28,17 +36,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core import (GlobalShuffleSampler, IndexDataset, LocalBatchShuffleSampler,
-                        Placement, ShardInfo, WindowSpec)
+from repro.core import IndexDataset, Placement, WindowSpec
 from repro.data import (gaussian_adjacency, make_token_stream, make_traffic_series,
                         random_sensor_coords, transition_matrices)
-from repro.distributed import Checkpointer, latest_step, restore
+from repro.distributed import latest_step
 from repro.launch.mesh import make_host_mesh
 from repro.models import dcrnn, pgt_dcrnn
 from repro.models.lm import model as lm
 from repro.optim import AdamConfig, warmup_cosine
-from repro.pipeline import PipelineConfig, build_pipeline
-from repro.train.loop import TrainLoopConfig, init_train_state, make_train_step, run_training
+from repro.pipeline import ElasticConfig, PipelineConfig, build_pipeline
+from repro.train.loop import TrainLoopConfig
 
 
 def _train_stgnn(arch, args, adam, sched, loop: TrainLoopConfig):
@@ -70,8 +77,10 @@ def _train_stgnn(arch, args, adam, sched, loop: TrainLoopConfig):
         series, spec, mesh, loss_fn, params,
         PipelineConfig(batch_per_rank=args.batch // dp,
                        placement=Placement(args.placement),
-                       gather=args.gather, seed=args.seed, adam=adam,
-                       schedule=sched, loop=loop))
+                       gather=args.gather, halo=not args.no_halo,
+                       seed=args.seed, adam=adam,
+                       schedule=sched, loop=loop),
+        elastic=_elastic_config(args))
     if args.resume and loop.ckpt_dir:
         step = latest_step(loop.ckpt_dir)
         if step is not None:
@@ -80,37 +89,44 @@ def _train_stgnn(arch, args, adam, sched, loop: TrainLoopConfig):
 
 
 def _train_lm(arch, args, adam, sched, loop: TrainLoopConfig):
-    """Token-stream windows (nodes==1 case): y = shift(x), custom gather."""
+    """Token-stream windows (nodes==1 case) through the same pipeline: the
+    ``lm`` gather entry reconstructs (tokens, shifted labels) on-device."""
     cfg = arch.smoke_config() if args.smoke else arch.lm
-    stream = jnp.asarray(make_token_stream(args.entries, cfg.vocab, seed=args.seed))
+    stream = np.asarray(make_token_stream(args.entries, cfg.vocab, seed=args.seed))
     spec = WindowSpec(horizon=1, input_len=args.seq_len)
-    ds = IndexDataset.from_raw(np.asarray(stream), spec, scale_feature=None)
+    ds = IndexDataset.from_raw(stream, spec, scale_feature=None)
     ds = dataclasses.replace(ds, series=stream)  # tokens: no standardisation
     params = lm.init(jax.random.PRNGKey(args.seed), cfg)
 
-    from repro.core import lm_window_batch
-
-    def loss_fn(p, starts):
-        toks, labels = lm_window_batch(ds.series, starts, seq_len=args.seq_len)
+    def loss_fn(p, toks, labels):
         return lm.loss_fn(p, cfg, toks, labels)
 
-    train_step = make_train_step(loss_fn, adam, sched)
-    state = init_train_state(params, adam)
-    sampler_cls = (GlobalShuffleSampler if args.shuffle == "global"
-                   else LocalBatchShuffleSampler)
-    sampler = sampler_cls(ds.train_windows, args.batch, ShardInfo(0, 1),
-                          seed=args.seed)
-    ckpt = Checkpointer(loop.ckpt_dir) if loop.ckpt_dir else None
-    start_step = 0
-    if args.resume and loop.ckpt_dir and latest_step(loop.ckpt_dir) is not None:
-        state, start_step = restore(loop.ckpt_dir, state)
-        print(f"resumed from step {start_step}")
-    return run_training(
-        state=state, train_step=train_step, sampler=sampler,
-        batch_of_starts=lambda s: jnp.asarray(ds.starts[s]),
-        loop=loop, eval_fn=None, checkpointer=ckpt,
-        start_epoch=start_step // sampler.steps_per_epoch,
-        start_step=start_step)
+    mesh = make_host_mesh()
+    from repro.core.distributed import dp_size
+    dp = max(dp_size(mesh), 1)
+    if args.batch % dp:
+        raise SystemExit(f"--batch {args.batch} not divisible by "
+                         f"data-parallel size {dp}")
+    # --shuffle selects the sampler through the placement contract: global
+    # draws over a replicated stream, or the fixed count-split partitions
+    # (local batch shuffling) over a time-sharded stream.
+    placement = (Placement.REPLICATED if args.shuffle == "global"
+                 else Placement.PARTITIONED)
+    pipe = build_pipeline(
+        stream, spec, mesh, loss_fn, params,
+        PipelineConfig(batch_per_rank=args.batch // dp, placement=placement,
+                       partition="count", gather="lm", seed=args.seed,
+                       adam=adam, schedule=sched, loop=loop),
+        dataset=ds, elastic=_elastic_config(args))
+    if args.resume and loop.ckpt_dir:
+        step = latest_step(loop.ckpt_dir)
+        if step is not None:
+            print(f"resuming from step {step}")
+    return pipe.fit(resume=args.resume, eval_fn=None)
+
+
+def _elastic_config(args) -> ElasticConfig | None:
+    return ElasticConfig() if args.elastic else None
 
 
 def main() -> None:
@@ -135,8 +151,33 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--no-halo", action="store_true",
+                    help="PARTITIONED: keep windows strictly interior to each "
+                         "rank's series shard (communication-free; see "
+                         "launch/dryrun.py --halo-evidence)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="attach the heartbeat->plan_remesh->shrink-and-"
+                         "resume policy (needs --ckpt-dir).  NOTE: the "
+                         "default heartbeat transport simulates an "
+                         "all-healthy fleet; detecting real worker loss "
+                         "needs a collector wired to ElasticConfig."
+                         "step_feed (see tests/test_elastic_engine.py)")
+    ap.add_argument("--init-distributed", action="store_true",
+                    help="call jax.distributed.initialize() (env-configured "
+                         "coordinator); each process then trains from its "
+                         "own per-rank feed via jax.process_index()")
     ap.add_argument("--history-out", default=None)
     args = ap.parse_args()
+    if args.init_distributed and args.elastic:
+        # The elastic shrink path re-materialises the series on the host
+        # (DataPlane.remesh), which needs every shard addressable — true on
+        # one process, not on a real fleet.  See ROADMAP (multi-host elastic).
+        raise SystemExit("--elastic with --init-distributed is not supported "
+                         "yet: the shrink path restores on a single host")
+    if args.init_distributed:
+        jax.distributed.initialize()
+        print(f"jax.distributed: process {jax.process_index()} of "
+              f"{jax.process_count()} (per-rank feed selection active)")
 
     arch = get_arch(args.arch)
     adam = AdamConfig(lr=args.lr)

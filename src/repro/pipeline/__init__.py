@@ -1,12 +1,25 @@
-"""Placement-aware training pipeline (dataset placement + sampler + fused step)."""
+"""Placement-aware training pipeline, split into two layers:
+
+- DataPlane: placement → sampler → deterministic per-rank feeds;
+- Engine: jitted gather/step, checkpointing, topology, elastic restarts.
+
+``build_pipeline`` is the compatibility constructor (returns an Engine).
+"""
 from repro.pipeline.gathers import GATHERS, resolve_gather
 from repro.pipeline.samplers import ShardAlignedBatchSampler
-from repro.pipeline.pipeline import Pipeline, PipelineConfig, build_pipeline
+from repro.pipeline.dataplane import DataPlane, PipelineConfig, build_dataplane
+from repro.pipeline.engine import ElasticConfig, Engine, build_engine
+from repro.pipeline.pipeline import Pipeline, build_pipeline
 
 __all__ = [
     "Pipeline",
     "PipelineConfig",
     "build_pipeline",
+    "DataPlane",
+    "build_dataplane",
+    "Engine",
+    "ElasticConfig",
+    "build_engine",
     "GATHERS",
     "resolve_gather",
     "ShardAlignedBatchSampler",

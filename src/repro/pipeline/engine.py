@@ -1,0 +1,436 @@
+"""Engine — the execution half of the pipeline: jitted step, checkpoints,
+topology, and elastic restarts.
+
+The engine owns everything the :class:`~repro.pipeline.dataplane.DataPlane`
+deliberately does not: the fused gather/loss train step, the checkpointer,
+and — when an :class:`ElasticConfig` is attached — the fault-tolerance loop
+that lets a run survive worker loss:
+
+1. every step, worker heartbeats reach the :class:`HeartbeatMonitor`
+   (``ElasticConfig.step_feed`` is the transport — a real collector on a
+   fleet, a deterministic fake for single-host fault-injection tests);
+2. when the monitor flags a worker, ``plan_remesh`` computes the largest
+   healthy sub-mesh (TP groups whole, data axis shrunk) and the in-flight
+   state is checkpointed with its (epoch, done_in_epoch) coordinates;
+3. the engine shrinks the mesh (``shrink_mesh``), rebuilds the data plane
+   for the new world (series re-placed via ``series_sharding``, sampler
+   rebuilt, per-worker batch re-scaled by ``scale_batch_or_steps``),
+   re-jits the step, and restores the latest checkpoint into the new
+   topology (``restore(..., shardings=...)`` re-shards on the way in);
+4. training resumes from the same (seed, epoch, step) coordinates —
+   samplers are deterministic functions of (seed, epoch), so the resumed
+   schedule is reproducible.  (Within the interrupted epoch the coverage is
+   approximate when the batch re-scales: the same permutation re-rows into
+   a different grid, so a few boundary windows may repeat or drop.  The
+   global step counter stays monotonic across re-meshes.)
+
+``Engine`` also keeps the whole legacy ``Pipeline`` surface (``.sampler``,
+``.dataset``, ``.describe()``, ``.fit``, ``.evaluate``, …) so
+``build_pipeline`` remains a working compatibility constructor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import Placement, data_axes, dp_size
+from repro.core.index_dataset import IndexDataset
+from repro.core.windows import WindowSpec
+from repro.distributed import (Checkpointer, HeartbeatMonitor, checkpoint_meta,
+                               latest_step, plan_remesh, restore,
+                               scale_batch_or_steps)
+from repro.launch.mesh import shrink_mesh
+from repro.pipeline.dataplane import DataPlane, PipelineConfig, build_dataplane
+from repro.pipeline.gathers import resolve_gather
+from repro.pipeline.samplers import ShardAlignedBatchSampler
+from repro.train.loop import (RestartSignal, init_train_state, make_train_step,
+                              run_training)
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    """Fault-tolerance policy for :meth:`Engine.fit`.
+
+    Heartbeat workers are indexed by DATA-PARALLEL rank (0..world−1); with
+    the defaults ``model_parallel == chips_per_host`` each worker is its own
+    TP group, so losing one drops exactly one data rank.  Set them per your
+    fleet layout when a TP group spans hosts — ``plan_remesh`` then drops
+    whole groups and the engine shrinks the world by the dropped-rank count.
+
+    ``step_feed(global_step, world) -> {rank: (step, step_time | None)}`` is
+    the heartbeat transport: which workers reported in since the last step.
+    None (the default) simulates an all-healthy fleet — every rank beats
+    every step — which is correct for single-process runs and lets tests
+    inject faults by omitting ranks (and driving ``clock``) instead.
+
+    On shrink with ``keep_global_batch=True`` the per-worker batch is
+    ``ceil(global/new_dp)``, so the global batch can GROW by up to
+    ``new_dp − 1`` windows (no ragged trim exists — uniform SPMD batches);
+    ``False`` keeps the per-worker batch and shrinks the global batch.
+    """
+
+    check_every: int = 1           # poll the monitor every N steps
+    heartbeat_timeout: float = 60.0
+    straggler_factor: float = 3.0
+    model_parallel: int = 1        # TP group size, kept whole by plan_remesh
+    chips_per_host: int = 1
+    keep_global_batch: bool = True  # scale_batch_or_steps policy on shrink
+    max_restarts: int = 8
+    clock: Callable[[], float] = time.monotonic
+    step_feed: Callable[[int, int], dict] | None = None
+
+
+@dataclasses.dataclass
+class Engine:
+    """Jitted step + checkpointing + topology over a rebuildable DataPlane."""
+
+    dataplane: DataPlane
+    loss_fn: Callable
+    init_params: Any
+    train_step: Callable
+    _eval_loss: Callable  # jitted (params, starts) -> (loss, metrics)
+    elastic: ElasticConfig | None = None
+    # One record per elastic restart: the plan plus the resume coordinates.
+    restarts: list = dataclasses.field(default_factory=list)
+
+    # ------------------------------------------- legacy Pipeline surface
+    @property
+    def config(self) -> PipelineConfig:
+        return self.dataplane.config
+
+    @property
+    def mesh(self):
+        return self.dataplane.mesh
+
+    @property
+    def spec(self) -> WindowSpec:
+        return self.dataplane.spec
+
+    @property
+    def dataset(self) -> IndexDataset:
+        return self.dataplane.dataset
+
+    @property
+    def sampler(self):
+        return self.dataplane.sampler
+
+    @property
+    def series_sharding(self):
+        return self.dataplane.series_sharding
+
+    @property
+    def world(self) -> int:
+        return self.dataplane.world
+
+    @property
+    def steps_per_epoch(self) -> int:
+        return self.dataplane.steps_per_epoch
+
+    @property
+    def global_batch(self) -> int:
+        return self.dataplane.global_batch
+
+    def describe(self) -> dict:
+        return self.dataplane.describe()
+
+    def batch_of_starts(self, window_ids: np.ndarray) -> jnp.ndarray:
+        return self.dataplane.batch_of_starts(window_ids)
+
+    # --------------------------------------------------------------- training
+    def fit(
+        self,
+        *,
+        epochs: int | None = None,
+        eval_fn: Callable[[Any], dict] | None | str = "auto",
+        resume: bool = True,
+    ) -> tuple[Any, list[dict]]:
+        """Train (resuming from ``loop.ckpt_dir`` when a checkpoint exists).
+
+        Returns ``(state, history)`` exactly like ``run_training``.
+        ``eval_fn="auto"`` evaluates val-split MAE at every epoch end.  With
+        an :class:`ElasticConfig` attached, worker loss mid-run triggers a
+        shrink-and-resume instead of killing the run (requires ``ckpt_dir``).
+        """
+        loop = self.config.loop
+        if epochs is not None:
+            loop = dataclasses.replace(loop, epochs=epochs)
+        if self.elastic is not None and not loop.ckpt_dir:
+            raise ValueError("elastic fit needs loop.ckpt_dir: the shrink "
+                             "path restores from the latest checkpoint")
+        # Copy params into the fresh state: the jitted step donates its state
+        # argument, and aliasing the caller's arrays would delete them after
+        # the first step (breaking re-fits and sibling pipelines).
+        params = jax.tree.map(jnp.copy, self.init_params)
+        state = init_train_state(params, self.config.adam)
+        checkpointer = Checkpointer(loop.ckpt_dir) if loop.ckpt_dir else None
+        start_step, start_epoch, start_done = 0, 0, None
+        if resume and loop.ckpt_dir and latest_step(loop.ckpt_dir) is not None:
+            state, start_step = restore(loop.ckpt_dir, state)
+            # Prefer the checkpoint's own (epoch, done_in_epoch) coordinates
+            # over deriving them from the raw step: after an elastic shrink
+            # changed steps_per_epoch the derivation would land on the wrong
+            # (epoch, position).  start_step stays the raw checkpoint step —
+            # a monotonic counter — so later saves always outrank this one.
+            meta = checkpoint_meta(loop.ckpt_dir)
+            if "epoch" in meta:
+                start_epoch = int(meta["epoch"])
+                start_done = max(int(meta.get("done_in_epoch", 0)), 0)
+            else:
+                start_epoch = start_step // self.steps_per_epoch
+        if eval_fn == "auto":
+            # Multi-process eval is not wired yet: evaluate() hands GLOBAL
+            # window pools to batch_of_starts, which only understands
+            # per-process feed rows under jax.distributed (see ROADMAP).
+            has_val = (len(self.dataset.val_windows) > 0
+                       and self.dataplane.process_ranks is None)
+            eval_fn = (lambda st: {"val_mae": self.evaluate(st["params"])}) \
+                if has_val else None
+        history: list[dict] = []
+        monitor = self._make_monitor()
+        restarts_this_fit = 0
+        while True:
+            try:
+                state, hist = run_training(
+                    state=state,
+                    train_step=self.train_step,
+                    sampler=self.dataplane,
+                    batch_of_starts=self.dataplane.batch_of_starts,
+                    loop=loop,
+                    eval_fn=eval_fn,
+                    checkpointer=checkpointer,
+                    start_epoch=start_epoch,
+                    start_step=start_step,
+                    start_done_in_epoch=start_done,
+                    health_cb=self._health_cb(monitor),
+                )
+                history.extend(hist)
+                return state, history
+            except RestartSignal as sig:
+                history.extend(sig.history)
+                if restarts_this_fit >= self.elastic.max_restarts:
+                    raise RuntimeError(
+                        f"elastic restart budget exhausted "
+                        f"({self.elastic.max_restarts})") from sig
+                restarts_this_fit += 1
+                state, start_epoch, start_step, start_done = \
+                    self._apply_plan(sig, loop)
+                monitor = self._make_monitor()
+
+    # ------------------------------------------------------------- evaluation
+    def evaluate(self, params, *, split: str = "val", max_batches: int = 4) -> float:
+        """Window-weighted mean loss over up to ``max_batches`` global batches.
+
+        The final partial batch of a split is evaluated too (as a smaller
+        batch — one extra compile for its shape) and the mean is weighted by
+        window count, so small splits are not silently truncated.
+        """
+        pool = getattr(self.dataset, f"{split}_windows")
+        if len(pool) == 0:
+            return float("nan")
+        b = min(self.global_batch, len(pool))
+        limit = min(len(pool), max_batches * b)
+        losses, weights = [], []
+        for i in range(0, limit, b):
+            chunk = pool[i:i + b]
+            loss, _ = self._eval_loss(params, self.batch_of_starts(chunk))
+            losses.append(float(loss))
+            weights.append(len(chunk))
+        return float(np.average(losses, weights=weights))
+
+    # ---------------------------------------------------------------- elastic
+    def _make_monitor(self) -> HeartbeatMonitor | None:
+        if self.elastic is None:
+            return None
+        el = self.elastic
+        return HeartbeatMonitor(self.world, timeout=el.heartbeat_timeout,
+                                straggler_factor=el.straggler_factor,
+                                clock=el.clock)
+
+    def _health_cb(self, monitor: HeartbeatMonitor | None):
+        if monitor is None:
+            return None
+        el = self.elastic
+        world = self.world
+
+        def cb(global_step: int) -> None:
+            beats = (el.step_feed(global_step, world)
+                     if el.step_feed is not None
+                     else {r: (global_step, None) for r in range(world)})
+            for rank, (step, step_time) in beats.items():
+                if rank in monitor.workers:
+                    monitor.beat(rank, step, step_time)
+            if el.check_every > 1 and global_step % el.check_every:
+                return
+            unhealthy = monitor.unhealthy()
+            if not unhealthy:
+                return
+            plan = plan_remesh(world, unhealthy,
+                               model_parallel=el.model_parallel,
+                               chips_per_host=el.chips_per_host)
+            if plan is not None:
+                raise RestartSignal(plan)
+
+        return cb
+
+    def _apply_plan(self, sig: RestartSignal, loop
+                    ) -> tuple[Any, int, int, int]:
+        """Shrink to the plan's mesh and restore the latest checkpoint.
+
+        Returns ``(state, start_epoch, start_step, start_done_in_epoch)``:
+        the same (seed, epoch) and completed-step count within the
+        interrupted epoch, with ``start_step`` continuing the MONOTONIC
+        global counter from the failure checkpoint — step numbers never go
+        backwards, so ``latest_step`` can never resurrect a stale
+        pre-restart checkpoint.
+        """
+        el = self.elastic
+        plan = sig.plan
+        old_spe = self.steps_per_epoch
+        # Workers ARE data-parallel ranks here, so the new world is simply
+        # the surviving-rank count.  (plan.mesh_shape[0] counts TP GROUPS —
+        # the same number only when model_parallel == chips_per_host.)
+        new_world = self.world - len(set(plan.dropped_workers))
+        per_new, _ = scale_batch_or_steps(
+            self.global_batch, old_dp=self.world, new_dp=new_world,
+            keep_global_batch=el.keep_global_batch)
+        new_mesh = shrink_mesh(self.mesh, new_world)
+        self.dataplane = self.dataplane.remesh(
+            new_mesh, world=new_world, batch_per_rank=per_new)
+        self.train_step, self._eval_loss = _compile(
+            self.dataplane, self.loss_fn, self.config)
+        # Restore the failure-step checkpoint into the new topology: params
+        # and opt state are replicated in this runtime, so one re-sharding
+        # NamedSharding covers every leaf.
+        template = init_train_state(
+            jax.tree.map(jnp.copy, self.init_params), self.config.adam)
+        state, ckpt_step = restore(
+            loop.ckpt_dir, template,
+            shardings=NamedSharding(new_mesh, P()))
+        meta = checkpoint_meta(loop.ckpt_dir)
+        epoch = int(meta.get("epoch", sig.epoch))
+        done = max(int(meta.get("done_in_epoch", ckpt_step - epoch * old_spe)),
+                   0)
+        self.restarts.append({
+            "plan": plan, "epoch": epoch, "step": ckpt_step,
+            "world": new_world, "batch_per_rank": per_new,
+            "global_batch": self.global_batch,
+        })
+        return state, epoch, ckpt_step, done
+
+
+def _shard_local_gather_ok(dataplane: DataPlane, config: PipelineConfig) -> bool:
+    """Whether the train-step gather can lower as a shard_map (§5.4 proof).
+
+    The global-index gather over a time-sharded series makes XLA all-gather
+    the series (it cannot prove locality from runtime start values).  When
+    every sampled window is GUARANTEED interior to its rank's shard — the
+    aligned sampler with halo=False, one feed rank per device shard, even
+    time split — the gather can instead run per-shard with local offsets,
+    and the compiled program's only collective is the gradient all-reduce
+    (see launch/dryrun.py --halo-evidence for the byte counts).
+    """
+    mesh = dataplane.mesh
+    dp = dp_size(mesh)
+    return (config.placement is Placement.PARTITIONED
+            and not config.halo
+            and isinstance(dataplane.sampler, ShardAlignedBatchSampler)
+            and dp > 1
+            and dataplane.world == dp
+            and len(data_axes(mesh)) == 1
+            and dataplane.dataset.entries % dp == 0
+            and config.loop.microbatches == 1)
+
+
+def _shard_local_gather(gather: Callable, dataplane: DataPlane) -> Callable:
+    """Wrap ``gather`` in a shard_map: each rank gathers from ITS series
+    shard with shard-local offsets (global start − shard origin)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = dataplane.mesh
+    axis = data_axes(mesh)[0]
+    shard_len = dataplane.dataset.entries // int(mesh.shape[axis])
+
+    def local(series_shard, starts_shard, *, input_len, horizon):
+        lo = jax.lax.axis_index(axis) * shard_len
+        return gather(series_shard, starts_shard - lo,
+                      input_len=input_len, horizon=horizon)
+
+    def fn(series, starts, *, input_len, horizon):
+        import functools
+        body = functools.partial(local, input_len=input_len, horizon=horizon)
+        return shard_map(body, mesh=mesh,
+                         in_specs=(P(axis), P(axis)),
+                         out_specs=(P(axis), P(axis)),
+                         check_rep=False)(series, starts)
+
+    return fn
+
+
+def _compile(dataplane: DataPlane, loss_fn: Callable, config: PipelineConfig):
+    """(train_step, eval_loss) with the window gather fused over THIS data
+    plane's resident series — rebuilt on every re-mesh."""
+    gather = resolve_gather(config.gather)
+    spec = dataplane.spec
+    series = dataplane.dataset.series
+    # The series is CLOSED OVER, so without a constraint GSPMD is free to
+    # re-shard the captured constant — it replicates it, silently voiding
+    # the PARTITIONED/ONDEMAND memory contract and hiding the gathers'
+    # cross-shard traffic.  Pin the placement's sharding inside the step.
+    pin = (dataplane.series_sharding if dataplane.mesh.size > 1 else None)
+    # halo=False + aligned feeds: provably-local gathers lower as a
+    # shard_map — zero data collectives.  Eval stays on the global-index
+    # gather: val/test pools are drawn globally, not shard-aligned.
+    train_gather = (_shard_local_gather(gather, dataplane)
+                    if _shard_local_gather_ok(dataplane, config) else gather)
+
+    def train_loss(params, starts):
+        s = jax.lax.with_sharding_constraint(series, pin) if pin else series
+        x, y = train_gather(s, starts, input_len=spec.in_len,
+                            horizon=spec.horizon)
+        return loss_fn(params, x, y)
+
+    def eval_loss(params, starts):
+        s = jax.lax.with_sharding_constraint(series, pin) if pin else series
+        x, y = gather(s, starts, input_len=spec.in_len,
+                      horizon=spec.horizon)
+        return loss_fn(params, x, y)
+
+    schedule = config.schedule or (lambda s: config.adam.lr)
+    loop = config.loop
+    train_step = make_train_step(
+        train_loss, config.adam, schedule,
+        microbatches=loop.microbatches, grad_dtype=loop.grad_dtype,
+        donate=loop.donate)
+    return train_step, jax.jit(eval_loss)
+
+
+def build_engine(
+    raw: np.ndarray | None,
+    spec: WindowSpec,
+    mesh,
+    loss_fn: Callable[[Any, jnp.ndarray, jnp.ndarray], tuple[jnp.ndarray, dict]],
+    init_params: Any,
+    config: PipelineConfig = PipelineConfig(),
+    *,
+    dataset: IndexDataset | None = None,
+    elastic: ElasticConfig | None = None,
+) -> Engine:
+    """Assemble the full placement-aware trainer (DataPlane + Engine).
+
+    ``loss_fn(params, x, y) -> (loss, metrics)`` is the only model-specific
+    piece; the engine supplies (x, y) by fusing the selected window gather
+    into the jitted step.  Pass ``dataset=`` to reuse an already-built
+    ``IndexDataset``; pass ``elastic=`` to survive worker loss mid-fit.
+    """
+    dataplane = build_dataplane(raw, spec, mesh, config, dataset=dataset)
+    train_step, eval_loss = _compile(dataplane, loss_fn, config)
+    return Engine(dataplane=dataplane, loss_fn=loss_fn,
+                  init_params=init_params, train_step=train_step,
+                  _eval_loss=eval_loss, elastic=elastic)

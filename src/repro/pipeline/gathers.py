@@ -10,19 +10,37 @@ results, different lowerings:
 - ``fused``  — one gather of the whole span, split into (x, y).
 - ``pallas`` — the fused span gather through the scalar-prefetch Pallas
   kernel (``kernels/window_gather``).
+- ``lm``     — token-stream windows (``core.batching.lm_window_batch``):
+  the one contract deviation — y is x shifted by one inside the same span
+  (``x: [B, input_len]``, ``y: [B, input_len]``), so ``horizon`` only sets
+  the window span (use ``WindowSpec(horizon=1, input_len=seq_len)``).
 """
 from __future__ import annotations
 
 import functools
 from typing import Callable
 
-from repro.core.batching import gather_batch, gather_batch_fused, gather_batch_take
+from repro.core.batching import (gather_batch, gather_batch_fused,
+                                 gather_batch_take, lm_window_batch)
+
+
+def lm_gather(series, starts, *, input_len: int, horizon: int):
+    """LM next-token windows: inputs = stream[s:s+L], labels = shift-by-one.
+
+    ``horizon`` is fixed by the WindowSpec span (the extra label token) and
+    intentionally unused here — the gather reads ``input_len + 1`` tokens and
+    splits them into the (x, y) pair.
+    """
+    del horizon
+    return lm_window_batch(series, starts, seq_len=input_len)
+
 
 GATHERS: dict[str, Callable] = {
     "slice": gather_batch,
     "take": gather_batch_take,
     "fused": gather_batch_fused,
     "pallas": functools.partial(gather_batch_fused, use_pallas=True),
+    "lm": lm_gather,
 }
 
 

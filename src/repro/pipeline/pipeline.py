@@ -1,250 +1,49 @@
-"""Placement-aware training pipeline — the paper's workflow as one subsystem.
+"""Compatibility layer: the original ``Pipeline`` API over DataPlane+Engine.
 
-``build_pipeline`` takes ``(raw series, WindowSpec, mesh, model loss_fn)`` and
-returns a ready-to-run trainer.  It owns every decision the examples and
-benchmark harnesses used to re-glue by hand, keeping the dataset placement,
-the sampler and the jitted gather/step in agreement with one definition
-(``core/distributed.py``):
+The monolithic ``Pipeline`` was split into two layers:
 
-==============  ==========================  =================================
-Placement       series sharding             sampler
-==============  ==========================  =================================
-REPLICATED      ``P()`` (every device)      GlobalShuffleSampler.epoch_global
-PARTITIONED     ``P(data axes)`` on time    ShardAlignedBatchSampler (per-rank
-                                            partitions on the device shard
-                                            boundaries, shuffled batch order;
-                                            falls back to the contiguous
-                                            count-split when the train split
-                                            leaves tail ranks empty)
-ONDEMAND        ``P(data axes)`` on time    GlobalShuffleSampler (global
-                                            draws — the measured DDP baseline
-                                            whose gathers cross shards)
-==============  ==========================  =================================
+- :mod:`repro.pipeline.dataplane` — placement → sampler → per-rank feeds
+  (``feed(rank, epoch)``), with ``epoch_global`` kept as the single-host
+  assembly of the feed columns;
+- :mod:`repro.pipeline.engine` — the jitted gather/step, checkpointing,
+  topology, and the elastic shrink-and-resume loop.
 
-The window gather (``slice`` / ``take`` / ``fused`` / ``pallas``, see
-``pipeline/gathers.py``) is fused into the jitted train step: the host only
-ever ships int32 window starts; batches are reconstructed on-device from the
-resident series.  ``Pipeline.fit`` drives ``run_training`` with deterministic
-(seed, epoch) sampling plus step-granular checkpoints, so a kill-and-resume
-run is bit-identical to an uninterrupted one.
+``build_pipeline`` remains the one-call constructor every example and
+benchmark uses; it returns an :class:`~repro.pipeline.engine.Engine`, which
+keeps the whole legacy surface (``.fit``, ``.evaluate``, ``.sampler``,
+``.dataset``, ``.describe()``, ``.batch_of_starts``, ``.train_step``, …).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 
-from repro.core.distributed import (Placement, batch_sharding, dp_size,
-                                    series_sharding)
 from repro.core.index_dataset import IndexDataset
-from repro.core.sampler import (GlobalShuffleSampler, LocalBatchShuffleSampler,
-                                ShardInfo)
 from repro.core.windows import WindowSpec
-from repro.distributed import Checkpointer, latest_step, restore
-from repro.optim import AdamConfig
-from repro.pipeline.gathers import resolve_gather
-from repro.pipeline.samplers import ShardAlignedBatchSampler
-from repro.train.loop import (TrainLoopConfig, init_train_state,
-                              make_train_step, run_training)
+from repro.pipeline.dataplane import DataPlane, PipelineConfig, build_dataplane
+from repro.pipeline.engine import ElasticConfig, Engine, build_engine
 
-
-@dataclasses.dataclass(frozen=True)
-class PipelineConfig:
-    """Everything the pipeline decides beyond the data/model themselves."""
-
-    batch_per_rank: int = 8
-    placement: Placement = Placement.REPLICATED
-    gather: str = "slice"  # slice | take | fused | pallas
-    seed: int = 0
-    # Worker count for the sampler.  None = the mesh's data-parallel size;
-    # benchmarks override it to simulate w lock-step SPMD workers on a small
-    # host mesh (the global batch is then world × batch_per_rank).
-    world: int | None = None
-    # PARTITIONED partitioning: "aligned" places each rank's windows on its
-    # device's series-shard boundaries (local gathers; falls back to the
-    # count-split when a rank's shard holds no train windows); "count" forces
-    # the equal count-split (the paper's Table-5 local-batch-shuffling arm,
-    # equal per-rank training budget, approximate locality only).
-    partition: str = "aligned"
-    adam: AdamConfig = AdamConfig()
-    schedule: Callable[[Any], Any] | None = None  # step -> lr; None = adam.lr
-    loop: TrainLoopConfig = TrainLoopConfig()
-
-
-@dataclasses.dataclass
-class Pipeline:
-    """A placed dataset + matching sampler + fused jitted step, ready to run."""
-
-    config: PipelineConfig
-    mesh: Mesh
-    spec: WindowSpec
-    dataset: IndexDataset
-    sampler: Any
-    series_sharding: NamedSharding
-    train_step: Callable
-    init_params: Any
-    world: int
-    _eval_loss: Callable  # jitted (params, starts) -> (loss, metrics)
-    _batch_sharding: NamedSharding | None
-
-    # ------------------------------------------------------------- accessors
-    @property
-    def steps_per_epoch(self) -> int:
-        return self.sampler.steps_per_epoch
-
-    @property
-    def global_batch(self) -> int:
-        return self.config.batch_per_rank * self.world
-
-    def describe(self) -> dict:
-        """The placement contract this pipeline instantiated (testable)."""
-        return {
-            "placement": self.config.placement,
-            "sampler": type(self.sampler).__name__,
-            "series_spec": tuple(self.series_sharding.spec),
-            "gather": self.config.gather,
-            "world": self.world,
-            "global_batch": self.global_batch,
-        }
-
-    # ------------------------------------------------------------ data plumbing
-    def batch_of_starts(self, window_ids: np.ndarray) -> jnp.ndarray:
-        """Window ids (one epoch_global row) -> device array of start steps."""
-        starts = jnp.asarray(self.dataset.starts[np.asarray(window_ids)])
-        if self._batch_sharding is not None:
-            starts = jax.device_put(starts, self._batch_sharding)
-        return starts
-
-    # --------------------------------------------------------------- training
-    def fit(
-        self,
-        *,
-        epochs: int | None = None,
-        eval_fn: Callable[[Any], dict] | None | str = "auto",
-        resume: bool = True,
-    ) -> tuple[Any, list[dict]]:
-        """Train (resuming from ``loop.ckpt_dir`` when a checkpoint exists).
-
-        Returns ``(state, history)`` exactly like ``run_training``.
-        ``eval_fn="auto"`` evaluates val-split MAE at every epoch end.
-        """
-        loop = self.config.loop
-        if epochs is not None:
-            loop = dataclasses.replace(loop, epochs=epochs)
-        # Copy params into the fresh state: the jitted step donates its state
-        # argument, and aliasing the caller's arrays would delete them after
-        # the first step (breaking re-fits and sibling pipelines).
-        params = jax.tree.map(jnp.copy, self.init_params)
-        state = init_train_state(params, self.config.adam)
-        checkpointer = Checkpointer(loop.ckpt_dir) if loop.ckpt_dir else None
-        start_step = 0
-        if resume and loop.ckpt_dir and latest_step(loop.ckpt_dir) is not None:
-            state, start_step = restore(loop.ckpt_dir, state)
-        if eval_fn == "auto":
-            has_val = len(self.dataset.val_windows) > 0
-            eval_fn = (lambda st: {"val_mae": self.evaluate(st["params"])}) \
-                if has_val else None
-        return run_training(
-            state=state,
-            train_step=self.train_step,
-            sampler=self.sampler,
-            batch_of_starts=self.batch_of_starts,
-            loop=loop,
-            eval_fn=eval_fn,
-            checkpointer=checkpointer,
-            start_epoch=start_step // self.sampler.steps_per_epoch,
-            start_step=start_step,
-        )
-
-    def evaluate(self, params, *, split: str = "val", max_batches: int = 4) -> float:
-        """Mean loss over up to ``max_batches`` global batches of a split.
-
-        A split smaller than one global batch is evaluated as a single
-        smaller batch (recompiles the eval loss once) rather than skipped.
-        """
-        pool = getattr(self.dataset, f"{split}_windows")
-        if len(pool) == 0:
-            return float("nan")
-        b = min(self.global_batch, len(pool))
-        losses = []
-        for i in range(0, min(len(pool), max_batches * b) - b + 1, b):
-            loss, _ = self._eval_loss(params, self.batch_of_starts(pool[i:i + b]))
-            losses.append(float(loss))
-        return float(np.mean(losses))
-
-
-def _make_sampler(config: PipelineConfig, ds: IndexDataset, world: int):
-    shard = ShardInfo(0, world)
-    if config.placement is Placement.PARTITIONED:
-        if config.partition == "aligned":
-            # Per-rank partitions aligned to the series time-shards, so each
-            # rank's gathers stay inside the shard its device owns (§5.4).
-            try:
-                return ShardAlignedBatchSampler(
-                    ds.entries, ds.spec, ds.train_windows,
-                    config.batch_per_rank, world, seed=config.seed)
-            except ValueError:
-                # A rank's shard holds no (or too few) train windows — e.g.
-                # the 70/10/20 split leaves the val/test-tail ranks empty,
-                # or stride > 1.  Fall back to the contiguous count-split,
-                # whose boundaries only approximate the device shards (some
-                # gathers cross shards) — widen the train fraction if strict
-                # locality matters.
-                pass
-        elif config.partition != "count":
-            raise ValueError(f"unknown partition {config.partition!r}; "
-                             "expected 'aligned' or 'count'")
-        return LocalBatchShuffleSampler(ds.train_windows, config.batch_per_rank,
-                                        shard, seed=config.seed)
-    # REPLICATED: the paper's communication-free global shuffle.
-    # ONDEMAND: same global draws over a time-sharded series — every gather
-    # crosses shard boundaries; kept as the measured DDP baseline.
-    return GlobalShuffleSampler(ds.train_windows, config.batch_per_rank, shard,
-                                seed=config.seed)
+#: The legacy name: an assembled trainer IS the engine now.
+Pipeline = Engine
 
 
 def build_pipeline(
     raw: np.ndarray,
     spec: WindowSpec,
     mesh: Mesh,
-    loss_fn: Callable[[Any, jnp.ndarray, jnp.ndarray], tuple[jnp.ndarray, dict]],
+    loss_fn: Callable,
     init_params: Any,
     config: PipelineConfig = PipelineConfig(),
     *,
     dataset: IndexDataset | None = None,
-) -> Pipeline:
-    """Assemble the full placement-aware trainer.
+    elastic: ElasticConfig | None = None,
+) -> Engine:
+    """Thin compatibility constructor — see :func:`build_engine`."""
+    return build_engine(raw, spec, mesh, loss_fn, init_params, config,
+                        dataset=dataset, elastic=elastic)
 
-    ``loss_fn(params, x, y) -> (loss, metrics)`` is the only model-specific
-    piece; the pipeline supplies (x, y) by fusing the selected window gather
-    into the jitted step.  Pass ``dataset=`` to reuse an already-built
-    ``IndexDataset`` (it will still be (re)placed for the chosen placement).
-    """
-    world = config.world if config.world is not None else max(dp_size(mesh), 1)
-    sharding = series_sharding(mesh, config.placement)
-    ds = dataset if dataset is not None else IndexDataset.from_raw(raw, spec)
-    ds = ds.to_device(sharding)
-    sampler = _make_sampler(config, ds, world)
-    gather = resolve_gather(config.gather)
 
-    def starts_loss(params, starts):
-        x, y = gather(ds.series, starts, input_len=spec.in_len,
-                      horizon=spec.horizon)
-        return loss_fn(params, x, y)
-
-    schedule = config.schedule or (lambda s: config.adam.lr)
-    loop = config.loop
-    train_step = make_train_step(
-        starts_loss, config.adam, schedule,
-        microbatches=loop.microbatches, grad_dtype=loop.grad_dtype,
-        donate=loop.donate)
-    batch_shd = batch_sharding(mesh) if mesh.size > 1 else None
-    return Pipeline(
-        config=config, mesh=mesh, spec=spec, dataset=ds, sampler=sampler,
-        series_sharding=sharding, train_step=train_step,
-        init_params=init_params, world=world,
-        _eval_loss=jax.jit(starts_loss), _batch_sharding=batch_shd)
+__all__ = ["Pipeline", "PipelineConfig", "build_pipeline", "DataPlane",
+           "build_dataplane", "Engine", "ElasticConfig", "build_engine"]

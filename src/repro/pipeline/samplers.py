@@ -72,9 +72,10 @@ class ShardAlignedBatchSampler:
                 f"rank partition too small for one batch (counts={counts}); "
                 "widen the train split or use the count-split sampler")
 
-    def epoch_rank(self, epoch: int, rank: int) -> np.ndarray:
-        """[steps, batch] window ids for one rank, deterministic in
-        (seed, epoch) — no communication, every rank derives the schedule.
+    def feed(self, rank: int, epoch: int) -> np.ndarray:
+        """[steps, batch] window ids for ``rank`` — the per-process feed,
+        deterministic in (seed, epoch) — no communication, every rank
+        derives the schedule.
 
         Selection: a cyclic window of ``steps_per_epoch`` entries over a
         FIXED (per-rank) permutation of the rank's batches, advanced by
@@ -91,10 +92,15 @@ class ShardAlignedBatchSampler:
         order = _rng(self.seed, epoch).permutation(steps)
         return batches[chosen[order]]
 
+    def epoch_rank(self, epoch: int, rank: int) -> np.ndarray:
+        """Transposed-argument alias of :meth:`feed` (kept for callers that
+        predate the first-class feed contract)."""
+        return self.feed(rank, epoch)
+
     def epoch(self, epoch: int) -> np.ndarray:
-        return self.epoch_rank(epoch, 0)
+        return self.feed(0, epoch)
 
     def epoch_global(self, epoch: int) -> np.ndarray:
-        """[steps, world*batch] rank-major assembly for the SPMD step."""
+        """[steps, world*batch] rank-major assembly of the per-rank feeds."""
         return np.concatenate(
-            [self.epoch_rank(epoch, r) for r in range(self.world)], axis=1)
+            [self.feed(r, epoch) for r in range(self.world)], axis=1)

@@ -29,6 +29,23 @@ import numpy as np
 from repro.optim import AdamConfig, apply_updates, init_opt_state
 
 
+class RestartSignal(Exception):
+    """Raised by a ``health_cb`` to request an engine-level restart.
+
+    ``run_training`` checkpoints the in-flight state (so no step is lost),
+    annotates the signal with everything the engine needs to re-mesh and
+    resume — ``state``, ``history``, ``epoch``, ``step`` — and re-raises.
+    """
+
+    def __init__(self, plan=None, reason: str = ""):
+        super().__init__(reason or getattr(plan, "reason", "restart requested"))
+        self.plan = plan
+        self.state = None
+        self.history: list[dict] = []
+        self.epoch = 0
+        self.step = 0
+
+
 @dataclasses.dataclass(frozen=True)
 class TrainLoopConfig:
     epochs: int = 1
@@ -127,27 +144,77 @@ def run_training(
     checkpointer=None,
     start_epoch: int = 0,
     start_step: int = 0,
+    start_done_in_epoch: int | None = None,
+    health_cb: Callable[[int], None] | None = None,
 ) -> tuple[Any, list[dict]]:
     """Generic epoch loop.
 
-    ``sampler.epoch_global(e)`` yields [steps, global_batch] window starts;
+    ``sampler.epoch_global(e)`` yields [steps, global_batch] window starts
+    (``sampler.epoch_grid(e)`` is preferred when present — a DataPlane
+    returns only this process's feed columns under multi-process SPMD);
     ``batch_of_starts`` maps one row to the step's batch pytree (typically a
     device_put of the starts with the batch sharding — the gather itself
     happens inside the jitted step, from the resident series).
     Deterministic (seed, epoch) sampling + step-granular checkpoints mean a
     restart resumes bit-identically mid-epoch.
+
+    ``start_done_in_epoch`` decouples the resume position from the step
+    numbering: when given, ``start_epoch`` resumes after that many completed
+    steps (later epochs start at 0) and ``start_step`` is ONLY the monotonic
+    step counter.  Elastic restarts need this — after a re-mesh changes
+    ``steps_per_epoch``, deriving the position from ``start_step`` would
+    renumber checkpoints non-monotonically and ``latest_step`` could later
+    resurrect a stale pre-restart checkpoint.  When None (the default), the
+    position is derived from ``start_step`` as before.
+
+    ``health_cb(global_step)`` runs after every step; it may raise
+    :class:`RestartSignal` (e.g. the elastic engine's heartbeat monitor
+    flagging a dead worker), in which case the loop checkpoints the current
+    state with its (epoch, done_in_epoch) coordinates, annotates the signal,
+    and re-raises for the engine to re-mesh and resume.
     """
     history: list[dict] = []
     global_step = start_step
+    grid_of_epoch = getattr(sampler, "epoch_grid", sampler.epoch_global)
+
+    def epoch_meta(epoch: int, done: int, steps: int) -> dict:
+        """Checkpoint coordinates, normalised so a COMPLETE epoch reads as
+        the start of the next one — a resume into a topology whose
+        steps_per_epoch grew must not re-enter (and re-summarise) an epoch
+        that already finished."""
+        if done >= steps:
+            return {"epoch": epoch + 1, "done_in_epoch": 0}
+        return {"epoch": epoch, "done_in_epoch": done}
+
+    def check_health(done_now: int, steps: int) -> None:
+        """Poll health_cb; on RestartSignal checkpoint-and-annotate."""
+        if health_cb is None:
+            return
+        try:
+            health_cb(global_step)
+        except RestartSignal as sig:
+            if checkpointer is not None:
+                checkpointer.save(state, step=global_step,
+                                  meta=epoch_meta(epoch, done_now, steps))
+                checkpointer.wait()
+            sig.state, sig.history = state, history
+            sig.epoch, sig.step = epoch, global_step
+            raise
+
     for epoch in range(start_epoch, loop.epochs):
-        grid = sampler.epoch_global(epoch)
+        grid = grid_of_epoch(epoch)
         t0 = time.perf_counter()
         # Resume mid-epoch: skip steps already done.  Clamp to [0, steps] —
         # a start_step beyond this epoch (resume past a partially-logged
         # epoch with a stale start_epoch) must skip it wholesale, not index
         # with a done-count larger than the grid.
-        done_in_epoch = min(max(global_step - epoch * sampler.steps_per_epoch, 0),
-                            grid.shape[0])
+        if start_done_in_epoch is not None:
+            done_in_epoch = (min(start_done_in_epoch, grid.shape[0])
+                             if epoch == start_epoch else 0)
+        else:
+            done_in_epoch = min(
+                max(global_step - epoch * sampler.steps_per_epoch, 0),
+                grid.shape[0])
         metrics = None
         for i in range(done_in_epoch, grid.shape[0]):
             state, metrics = train_step(state, batch_of_starts(grid[i]))
@@ -157,7 +224,11 @@ def run_training(
                 history.append({"step": global_step, "epoch": epoch, **m})
             if (checkpointer is not None and loop.ckpt_every
                     and global_step % loop.ckpt_every == 0):
-                checkpointer.save(state, step=global_step)
+                checkpointer.save(
+                    state, step=global_step,
+                    meta=epoch_meta(epoch, i + 1, grid.shape[0]))
+            if i < grid.shape[0] - 1:
+                check_health(i + 1, grid.shape[0])
         if metrics is None:
             continue  # every step was already done on resume: nothing to log
         epoch_metrics = {"epoch": epoch, "epoch_time_s": time.perf_counter() - t0,
@@ -166,7 +237,13 @@ def run_training(
         if eval_fn is not None:
             epoch_metrics.update(eval_fn(state))
         history.append(epoch_metrics)
+        # The final step's health poll runs AFTER the epoch summary: a
+        # restart landing exactly on the epoch boundary would otherwise
+        # abort before the summary/eval row and the resumed run — which
+        # starts at the next epoch — could never emit it.
+        check_health(grid.shape[0], grid.shape[0])
     if checkpointer is not None:
-        checkpointer.save(state, step=global_step)
+        checkpointer.save(state, step=global_step,
+                          meta={"epoch": loop.epochs, "done_in_epoch": 0})
         checkpointer.wait()
     return state, history

@@ -73,6 +73,20 @@ def test_checkpoint_async_overlaps_and_surfaces_errors(tmp_path):
     assert ck.steps() == [2]
 
 
+def test_checkpoint_meta_roundtrip(tmp_path):
+    """Run coordinates ride the manifest so an elastic restart can resume at
+    the same (epoch, step) even when steps_per_epoch changed."""
+    from repro.distributed import checkpoint_meta
+
+    ck = Checkpointer(str(tmp_path), async_write=False)
+    ck.save(_tiny_state(), step=4, meta={"epoch": 1, "done_in_epoch": 2})
+    assert checkpoint_meta(str(tmp_path)) == {"epoch": 1, "done_in_epoch": 2}
+    ck.save(_tiny_state(), step=9)  # meta-less saves read back empty
+    assert checkpoint_meta(str(tmp_path)) == {}
+    assert checkpoint_meta(str(tmp_path), step=4) == {"epoch": 1,
+                                                      "done_in_epoch": 2}
+
+
 def test_elastic_restore_into_new_sharding(tmp_path):
     """Restart on a different topology: restore re-device_puts every leaf."""
     from jax.sharding import NamedSharding, PartitionSpec as P

@@ -1,0 +1,159 @@
+"""Elastic shrink-and-resume, single-host fault injection (ISSUE 2 tentpole):
+
+heartbeat flags a worker → ``plan_remesh`` shrinks the data axis →
+the latest checkpoint restores into the new mesh → training resumes
+deterministically from the same (seed, epoch, step), with the per-worker
+batch re-scaled by ``scale_batch_or_steps``.
+
+The fault is injected through :class:`ElasticConfig`'s two fakes — ``clock``
+(a mutable list standing in for ``time.monotonic``) and ``step_feed`` (the
+heartbeat transport, which simply stops reporting the "dead" rank while the
+clock jumps past the timeout) — so the whole chain runs on one host with no
+real worker loss.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Placement, WindowSpec
+from repro.core.distributed import dp_size
+from repro.data import make_traffic_series
+from repro.distributed import scale_batch_or_steps
+from repro.launch.mesh import make_host_mesh, shrink_mesh
+from repro.optim import AdamConfig
+from repro.pipeline import ElasticConfig, PipelineConfig, build_pipeline
+from repro.train import TrainLoopConfig
+
+ENTRIES, NODES, HORIZON, B, WORLD = 120, 3, 2, 2, 4
+SPEC = WindowSpec(horizon=HORIZON, input_len=HORIZON)
+DEAD_RANK, DEAD_AT_STEP = 1, 3
+
+
+def _params():
+    return {"w": jnp.full((NODES, 2), 0.1, jnp.float32)}
+
+
+def _loss_fn(p, x, y):
+    pred = x[:, -1] * p["w"]
+    return jnp.mean((pred - y[:, 0]) ** 2), {}
+
+
+class OneDeadWorker:
+    """step_feed fake: rank ``DEAD_RANK`` stops heartbeating at global step
+    ``dead_after`` while the shared fake clock jumps past the heartbeat
+    timeout, so the very next poll flags it DEAD.  After the re-mesh the
+    world has shrunk and every surviving rank beats normally."""
+
+    def __init__(self, clock, dead_after: int = DEAD_AT_STEP):
+        self.clock = clock
+        self.dead_after = dead_after
+
+    def __call__(self, step: int, world: int) -> dict:
+        self.clock[0] += 1.0
+        beats = {r: (step, None) for r in range(world)}
+        if world == WORLD and step >= self.dead_after:
+            del beats[DEAD_RANK]
+            self.clock[0] += 100.0  # fly past the 50 s timeout
+        return beats
+
+
+def _elastic_pipe(ckpt_dir: str, *, epochs: int = 2,
+                  dead_after: int = DEAD_AT_STEP):
+    clock = [0.0]
+    elastic = ElasticConfig(heartbeat_timeout=50.0, clock=lambda: clock[0],
+                            step_feed=OneDeadWorker(clock, dead_after))
+    return build_pipeline(
+        make_traffic_series(ENTRIES, NODES), SPEC, make_host_mesh(),
+        _loss_fn, _params(),
+        PipelineConfig(batch_per_rank=B, placement=Placement.REPLICATED,
+                       world=WORLD, seed=7, adam=AdamConfig(lr=1e-2),
+                       loop=TrainLoopConfig(epochs=epochs, log_every=1,
+                                            ckpt_dir=ckpt_dir)),
+        elastic=elastic)
+
+
+def test_shrink_and_resume_full_chain(tmp_path):
+    ckpt_dir = str(tmp_path / "ck")
+    pipe = _elastic_pipe(ckpt_dir)
+    old_global = pipe.global_batch
+    state, history = pipe.fit(eval_fn=None)
+
+    # 1. the heartbeat monitor flagged the dead worker and plan_remesh
+    #    dropped exactly it, shrinking the data axis 4 -> 3
+    assert len(pipe.restarts) == 1
+    rec = pipe.restarts[0]
+    assert rec["plan"].dropped_workers == (DEAD_RANK,)
+    assert rec["plan"].mesh_shape == (WORLD - 1, 1)
+
+    # 2. the engine re-scaled the per-worker batch per scale_batch_or_steps
+    per, glob = scale_batch_or_steps(old_global, old_dp=WORLD,
+                                     new_dp=WORLD - 1)
+    assert pipe.world == WORLD - 1
+    assert pipe.config.batch_per_rank == per
+    assert pipe.global_batch == glob
+    assert dp_size(pipe.mesh) == min(WORLD - 1, len(jax.devices()))
+
+    # 3. resumed from the same (seed, epoch, step): the failure checkpoint
+    #    carries (epoch 0, 3 steps done) and no epoch is lost or repeated
+    assert rec["epoch"] == 0 and rec["step"] == DEAD_AT_STEP
+    steps = [h["step"] for h in history if "epoch_time_s" not in h]
+    assert steps == sorted(steps) and len(steps) == len(set(steps))
+    assert [h["epoch"] for h in history if "epoch_time_s" in h] == [0, 1]
+    # the global step counter stays MONOTONIC across the re-mesh, so the
+    # newest checkpoint is always the highest-numbered one
+    from repro.distributed import latest_step
+    assert latest_step(ckpt_dir) == max(h["step"] for h in history)
+    # the sampler seed is unchanged — the resumed epoch draws from the same
+    # deterministic (seed, epoch) schedule at the new world size
+    assert pipe.config.seed == 7
+    assert jax.tree.leaves(state)  # training actually produced a state
+
+
+def test_shrink_and_resume_is_deterministic(tmp_path):
+    """Two elastic runs with the same fault schedule are bit-identical."""
+    s1, h1 = _elastic_pipe(str(tmp_path / "a")).fit(eval_fn=None)
+    s2, h2 = _elastic_pipe(str(tmp_path / "b")).fit(eval_fn=None)
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert [h["step"] for h in h1] == [h["step"] for h in h2]
+    l1 = [h["loss"] for h in h1 if "loss" in h]
+    l2 = [h["loss"] for h in h2 if "loss" in h]
+    assert l1 == l2
+
+
+def test_restart_on_epoch_boundary_keeps_summary(tmp_path):
+    """A fault landing exactly on an epoch's final step must not eat the
+    epoch summary: the health poll for that step runs AFTER the summary is
+    appended, and the resumed run skips the fully-done epoch wholesale."""
+    pipe = _elastic_pipe(str(tmp_path / "ck"), dead_after=10)  # spe == 10
+    assert pipe.steps_per_epoch == 10
+    _, history = pipe.fit(eval_fn=None)
+    assert len(pipe.restarts) == 1
+    assert pipe.restarts[0]["step"] == 10
+    summaries = [h["epoch"] for h in history if "epoch_time_s" in h]
+    assert summaries == [0, 1]  # epoch 0's summary survived the restart
+    steps = [h["step"] for h in history if "epoch_time_s" not in h]
+    assert steps == sorted(steps) and len(steps) == len(set(steps))
+
+
+def test_elastic_requires_ckpt_dir():
+    clock = [0.0]
+    pipe = build_pipeline(
+        make_traffic_series(ENTRIES, NODES), SPEC, make_host_mesh(),
+        _loss_fn, _params(),
+        PipelineConfig(batch_per_rank=B, world=WORLD,
+                       loop=TrainLoopConfig(epochs=1)),
+        elastic=ElasticConfig(clock=lambda: clock[0]))
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        pipe.fit(eval_fn=None)
+
+
+def test_shrink_mesh_keeps_model_axis_whole():
+    mesh = make_host_mesh()
+    n = len(jax.devices())
+    smaller = shrink_mesh(mesh, max(n - 1, 1))
+    assert int(smaller.shape.get("model", 1)) == 1
+    assert dp_size(smaller) == max(min(n - 1, dp_size(mesh)), 1)
+    # shrinking to at-or-above the physical pool is the identity
+    assert shrink_mesh(mesh, n + 1) is mesh

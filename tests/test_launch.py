@@ -21,7 +21,8 @@ def _mesh1():
 def test_lm_param_specs_tp_divisibility():
     """Rules must only shard dims that divide the axis; fall back otherwise."""
     cfg = get_arch("minitron-8b").lm  # heads 32, kv 8, d_ff 16384
-    mesh16 = Mesh(np.array(jax.devices() * 16).reshape(1, 16)[..., :16].reshape(1, 16),
+    # tile to exactly 16 mesh slots regardless of the host's device count
+    mesh16 = Mesh(np.array((jax.devices() * 16)[:16]).reshape(1, 16),
                   ("data", "model"))
     spec = shd.lm_param_spec("stages/0/sub0/attn/wq/w", (32, 4096, 4096),
                              cfg, mesh16)
@@ -164,3 +165,21 @@ def test_all_cells_enumerates_40():
     skips = [c for c in lm_cells if c[2]]
     assert len(skips) == 7  # pure full-attention archs skip long_500k
     assert all(s[1] == "long_500k" for s in skips)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="collectives need a >1-device mesh "
+                           "(run with XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8)")
+def test_halo_evidence_communication_free():
+    """Dry-run evidence for the PipelineConfig.halo knob: the halo=False
+    (shard-local) lowering of the PARTITIONED step moves ZERO data-collective
+    bytes — only the gradient all-reduce — while halo=True's global-index
+    lowering all-gathers the resident series."""
+    from repro.launch.dryrun import partitioned_halo_evidence
+
+    rec = partitioned_halo_evidence(make_host_mesh())
+    assert rec["halo_false"]["data_bytes"] == 0
+    assert rec["halo_false"]["all-reduce"] > 0  # grads still reduce
+    assert rec["halo_true"]["data_bytes"] > 0
+    assert rec["halo_true"]["counts"]["all-gather"] >= 1

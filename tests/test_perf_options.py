@@ -76,16 +76,19 @@ def test_attention_chunk_config_equivalence(q_chunk, kv_chunk):
 
 
 def test_mode2d_program_runs_on_host_mesh():
-    """mode2d cell program lowers + executes on the 1-device host mesh."""
+    """mode2d cell program lowers + executes on a small host mesh."""
     import dataclasses as dc
 
     from repro.launch.specs import build_lm_train
     from repro.configs.base import ShapeCell
+    from repro.launch.mesh import shrink_mesh
 
     arch = get_arch("minitron-8b")
     arch = dc.replace(arch, lm=arch.smoke_config())
     cell = ShapeCell("tiny", "train", 64, 2)
-    mesh = make_host_mesh(model=1)
+    # cap the data axis at the global batch (2) so the batch stays divisible
+    # on forced multi-device hosts (the CI mesh-8 leg)
+    mesh = shrink_mesh(make_host_mesh(model=1), cell.global_batch)
     prog = build_lm_train(arch, cell, mesh, mode2d=True, microbatches=1)
     rng = np.random.default_rng(0)
 

@@ -46,13 +46,13 @@ def _loss_fn(p, x, y):
     return jnp.mean((pred - y[:, 0]) ** 2), {}
 
 
-def _pipe(placement, *, ckpt_dir=None, gather="slice", epochs=2):
+def _pipe(placement, *, ckpt_dir=None, gather="slice", epochs=2, halo=True):
     return build_pipeline(
         make_traffic_series(ENTRIES, NODES), SPEC, make_host_mesh(),
         _loss_fn, _params(),
         PipelineConfig(
             batch_per_rank=B, placement=placement, world=WORLD, gather=gather,
-            seed=11, adam=AdamConfig(lr=1e-2),
+            halo=halo, seed=11, adam=AdamConfig(lr=1e-2),
             loop=TrainLoopConfig(epochs=epochs, log_every=0,
                                  ckpt_dir=ckpt_dir)))
 
@@ -134,12 +134,150 @@ def test_gather_variants_agree_on_pipeline_batches(placement):
         name: fn(pipe.dataset.series, starts,
                  input_len=SPEC.in_len, horizon=SPEC.horizon)
         for name, fn in GATHERS.items()
+        if name != "lm"  # different contract: y = shift(x), token streams
     }
     ref_x, ref_y = results.pop("slice")
     assert ref_x.shape == (WORLD * B, SPEC.in_len, NODES, 2)
     for name, (x, y) in results.items():
         assert np.array_equal(np.asarray(ref_x), np.asarray(x)), name
         assert np.array_equal(np.asarray(ref_y), np.asarray(y)), name
+
+
+# ------------------------------------------------------ per-rank feed contract
+@pytest.mark.parametrize("placement", list(Placement))
+def test_per_rank_feeds_assemble_epoch_global(placement):
+    """epoch_global is ONLY the single-host assembly of the per-rank feed
+    columns: concat([feed(r, e) for r in ranks], axis=1) == epoch_global(e)."""
+    dp = _pipe(placement).dataplane
+    for epoch in (0, 1, 5):
+        cols = np.concatenate([dp.feed(r, epoch) for r in range(WORLD)], axis=1)
+        assert np.array_equal(cols, dp.epoch_global(epoch))
+        assert np.array_equal(dp.epoch_grid(epoch), dp.epoch_global(epoch))
+
+
+# ------------------------------------------------------------ PARTITIONED halo
+def test_partitioned_halo_knob_strictly_interior():
+    """halo=False confines every sampled window to its rank's series shard
+    (zero data communication); halo=True may spill span−1 steps (more
+    samples).  Both surface through PipelineConfig."""
+    from repro.core.distributed import local_time_range as ltr
+
+    interior = _pipe(Placement.PARTITIONED, halo=False)
+    spilling = _pipe(Placement.PARTITIONED, halo=True)
+    assert interior.describe()["halo"] is False
+    assert spilling.describe()["halo"] is True
+    for r in range(WORLD):
+        lo, hi = ltr(ENTRIES, r, WORLD)
+        ids = interior.sampler.rank_ids[r]
+        assert len(ids) > 0
+        assert ids.min() >= lo and ids.max() + SPEC.span <= hi
+    n_interior = sum(len(i) for i in interior.sampler.rank_ids)
+    n_halo = sum(len(i) for i in spilling.sampler.rank_ids)
+    assert n_halo >= n_interior
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="collectives need a >1-device mesh")
+def test_partitioned_halo_false_step_is_communication_free():
+    """With aligned feeds and halo=False (one rank per device shard), the
+    ENGINE's compiled train step must contain zero data collectives — only
+    the gradient all-reduce — while halo=True keeps the global-index
+    lowering whose gather crosses shards.  Same starts, same loss."""
+    from repro.core.distributed import dp_size
+    from repro.core.index_dataset import IndexDataset
+    from repro.launch.dryrun import collective_bytes
+    from repro.train.loop import init_train_state
+
+    mesh = make_host_mesh()
+    dp = dp_size(mesh)
+    raw = make_traffic_series(16 * dp, NODES)
+    # widen the train split so every device shard holds train windows
+    ds = IndexDataset.from_raw(raw, SPEC, train=0.97, val=0.01)
+
+    def build(halo):
+        return build_pipeline(
+            raw, SPEC, mesh, _loss_fn, _params(),
+            PipelineConfig(batch_per_rank=2, placement=Placement.PARTITIONED,
+                           halo=halo, seed=0, adam=AdamConfig(lr=1e-2),
+                           loop=TrainLoopConfig(epochs=1, log_every=0)),
+            dataset=ds)
+
+    interior, spilling = build(False), build(True)
+    assert interior.describe()["sampler"] == "ShardAlignedBatchSampler"
+    starts = interior.batch_of_starts(interior.sampler.epoch_global(0)[0])
+
+    def data_bytes(pipe):
+        state = init_train_state(_params(), pipe.config.adam)
+        hlo = pipe.train_step.lower(state, starts).compile().as_text()
+        coll = collective_bytes(hlo)
+        return coll["total"] - coll["all-reduce"]
+
+    assert data_bytes(interior) == 0
+    assert data_bytes(spilling) > 0
+    # both lowerings see the same windows -> same loss
+    _, m_i = interior.train_step(init_train_state(_params(),
+                                                  interior.config.adam), starts)
+    _, m_s = spilling.train_step(init_train_state(_params(),
+                                                  spilling.config.adam), starts)
+    np.testing.assert_allclose(float(m_i["loss"]), float(m_s["loss"]),
+                               rtol=1e-6)
+
+
+# -------------------------------------------------------- evaluate ragged tail
+def test_evaluate_includes_ragged_tail():
+    """The final partial batch of a small split must contribute (window-
+    weighted), not be silently dropped — the old loop truncated it and
+    biased reported val/test MAE."""
+    pipe = _pipe(Placement.REPLICATED)
+    params = _params()
+    pool = pipe.dataset.val_windows
+    b = pipe.global_batch
+    assert len(pool) % b != 0 and len(pool) > b  # the split has a ragged tail
+    chunks = [pool[i:i + b] for i in range(0, len(pool), b)]
+    losses = [float(pipe._eval_loss(params, pipe.batch_of_starts(c))[0])
+              for c in chunks]
+    expected = float(np.average(losses, weights=[len(c) for c in chunks]))
+    got = pipe.evaluate(params)
+    assert got == pytest.approx(expected)
+    assert got != pytest.approx(losses[0])  # the old full-batches-only value
+
+
+# ------------------------------------------------------------- LM gather entry
+def test_lm_gather_entry_shift_windows():
+    stream = jnp.arange(40, dtype=jnp.int32)
+    starts = jnp.asarray([0, 3, 7], dtype=jnp.int32)
+    x, y = GATHERS["lm"](stream, starts, input_len=5, horizon=1)
+    np.testing.assert_array_equal(
+        np.asarray(x), [np.arange(s, s + 5) for s in (0, 3, 7)])
+    np.testing.assert_array_equal(
+        np.asarray(y), [np.arange(s + 1, s + 6) for s in (0, 3, 7)])
+
+
+def test_lm_pipeline_end_to_end():
+    """The LM token-stream workload rides the pipeline via gather='lm'."""
+    import dataclasses
+
+    from repro.core.index_dataset import IndexDataset
+
+    rng = np.random.default_rng(0)
+    stream = rng.integers(0, 16, size=400).astype(np.int32)
+    spec = WindowSpec(horizon=1, input_len=8)
+    ds = IndexDataset.from_raw(stream, spec, scale_feature=None)
+    ds = dataclasses.replace(ds, series=stream)  # tokens: no standardisation
+    params = {"emb": jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)}
+
+    def loss_fn(p, toks, labels):
+        return jnp.mean((p["emb"][toks] - p["emb"][labels]) ** 2), {}
+
+    pipe = build_pipeline(
+        stream, spec, make_host_mesh(), loss_fn, params,
+        PipelineConfig(batch_per_rank=4, world=1, gather="lm", seed=3,
+                       adam=AdamConfig(lr=1e-2),
+                       loop=TrainLoopConfig(epochs=1, log_every=1)),
+        dataset=ds)
+    state, history = pipe.fit(eval_fn=None)
+    losses = [h["loss"] for h in history if "loss" in h]
+    assert losses and all(np.isfinite(l) for l in losses)
 
 
 # ------------------------------------------------- train-loop resume hardening

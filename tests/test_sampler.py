@@ -66,6 +66,24 @@ def test_local_sample_shuffle_differs_from_batch_shuffle():
     assert set(e0.reshape(-1)) == set(range(12))
 
 
+def test_feed_is_first_class_and_assembles_epoch_global():
+    """feed(rank, epoch) is the primitive: column block r of epoch_global,
+    and identical to what rank r's own sampler would draw."""
+    ids = np.arange(64, dtype=np.int32)
+    world, b = 4, 3
+    for make in (GlobalShuffleSampler, LocalBatchShuffleSampler,
+                 local_shuffle_sampler):
+        s0 = make(ids, b, ShardInfo(0, world), seed=2)
+        for epoch in (0, 3):
+            cols = np.concatenate([s0.feed(r, epoch) for r in range(world)],
+                                  axis=1)
+            assert np.array_equal(cols, s0.epoch_global(epoch))
+        for r in range(world):
+            sib = make(ids, b, ShardInfo(r, world), seed=2)
+            assert np.array_equal(s0.feed(r, 1), sib.epoch(1))
+            assert np.array_equal(sib.feed(r, 1), sib.epoch(1))
+
+
 @given(n=st.integers(16, 200), world=st.sampled_from([1, 2, 4, 8]),
        b=st.integers(1, 4), seed=st.integers(0, 10))
 @settings(max_examples=50, deadline=None)
