@@ -14,10 +14,18 @@ static SPMD program cannot, so the TPU-native policy is:
 4. the launcher restores the latest checkpoint into the new topology
    (``distributed.checkpoint.restore`` re-shards) and resumes from the same
    (seed, epoch, step) — samplers are deterministic so no data is lost or
-   repeated.
+   repeated;
+5. when a previously-dropped worker heartbeats again (it rebooted, or its
+   link healed), the planner emits the inverse GROW plan: the data axis
+   re-expands by whole TP groups, the per-worker batch scales back down
+   (``scale_batch_or_steps`` against the BASE global batch), and the latest
+   checkpoint restores into the larger topology — the same machinery as a
+   shrink, run in reverse.
 
 This module is pure policy (no jax.distributed calls) so it is fully testable
-on one host; the launcher wires it to real transports.
+on one host; the launcher wires it to real transports
+(``repro.distributed.transport``: file-based for same-host multi-process,
+TCP for a fleet — both emit the events ``HeartbeatMonitor`` consumes).
 """
 from __future__ import annotations
 
@@ -30,6 +38,7 @@ class WorkerView:
     last_seen: float
     last_step: int
     step_time_ema: float | None = None
+    seen_beat: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +47,13 @@ class ElasticPlan:
     axis_names: tuple[str, ...]
     dropped_workers: tuple[int, ...]
     reason: str
+    # Workers re-admitted by a GROW plan (empty on shrink).  A plan is one or
+    # the other, never both: recovery is only planned from a healthy fleet.
+    readmitted_workers: tuple[int, ...] = ()
+
+    @property
+    def kind(self) -> str:
+        return "grow" if self.readmitted_workers else "shrink"
 
 
 class HeartbeatMonitor:
@@ -51,6 +67,12 @@ class HeartbeatMonitor:
         now = clock()
         self.workers = {i: WorkerView(last_seen=now, last_step=0)
                         for i in range(n_workers)}
+        # Set at the first liveness poll: a worker that has not beaten YET is
+        # timed from here, not from construction — everything between
+        # building the monitor and the first post-step poll (gloo init, the
+        # first jit compile) would otherwise count against its first
+        # heartbeat and a slow compile could flag live workers on poll one.
+        self._first_poll: float | None = None
 
     def beat(self, worker: int, step: int, step_time: float | None = None) -> None:
         """``step_time``: the worker's self-measured COMPUTE time for the step.
@@ -65,11 +87,22 @@ class HeartbeatMonitor:
                   else (now - w.last_seen) / max(step - w.last_step, 1))
             w.step_time_ema = dt if w.step_time_ema is None else 0.8 * w.step_time_ema + 0.2 * dt
         w.last_seen = now
-        w.last_step = step
+        w.seen_beat = True
+        # Monotonic: a beat reporting an OLDER step (a restarted process
+        # re-announcing from 0, or reordered transport delivery) still
+        # refreshes liveness but must not regress the step counter — the
+        # next genuine advance would otherwise divide its wall time by an
+        # inflated step delta and skew the straggler EMA.
+        w.last_step = max(w.last_step, step)
 
     def dead(self) -> list[int]:
         now = self._clock()
-        return [i for i, w in self.workers.items() if now - w.last_seen > self.timeout]
+        if self._first_poll is None:
+            self._first_poll = now
+        return [i for i, w in self.workers.items()
+                if now - (w.last_seen if w.seen_beat
+                          else max(w.last_seen, self._first_poll))
+                > self.timeout]
 
     def stragglers(self) -> list[int]:
         times = sorted(w.step_time_ema for w in self.workers.values()
@@ -89,6 +122,7 @@ def plan_remesh(
     n_total: int,
     unhealthy: list[int],
     *,
+    recovered: list[int] | tuple[int, ...] = (),
     model_parallel: int,
     chips_per_host: int = 4,
     axis_names: tuple[str, str] = ("data", "model"),
@@ -99,11 +133,34 @@ def plan_remesh(
     ``model_parallel`` chips, so losing a host removes
     ceil(model_parallel / chips_per_host)⁻¹… in practice we drop whole TP
     groups containing an unhealthy host and shrink the data axis.
+
+    ``recovered`` lists workers heartbeating from OUTSIDE the current fleet
+    (previously-dropped hosts asking to rejoin).  When the current fleet is
+    healthy, the planner re-admits them in whole TP groups and GROWS the data
+    axis — the inverse of a shrink.  An unhealthy fleet is shrunk first;
+    recovery is re-planned on a later poll once the fleet is stable.
     Returns None when the fleet is unchanged.
     """
-    if not unhealthy:
-        return None
     hosts_per_group = max(model_parallel // chips_per_host, 1)
+    if not unhealthy:
+        if not recovered:
+            return None
+        # Grow: re-admit whole TP groups' worth of recovered workers only —
+        # a partial group can't host a TP shard any more than it could on
+        # the way down.
+        n_groups = n_total // hosts_per_group
+        back_groups = len(set(recovered)) // hosts_per_group
+        if back_groups < 1:
+            return None
+        readmitted = tuple(sorted(set(recovered)))[: back_groups * hosts_per_group]
+        return ElasticPlan(
+            mesh_shape=(n_groups + back_groups, model_parallel),
+            axis_names=axis_names,
+            dropped_workers=(),
+            readmitted_workers=readmitted,
+            reason=f"re-admitted {back_groups} TP group(s) of recovered "
+                   f"workers {sorted(set(recovered))}",
+        )
     n_groups = n_total // hosts_per_group
     bad_groups = {w // hosts_per_group for w in unhealthy}
     healthy_groups = n_groups - len(bad_groups)
@@ -122,10 +179,18 @@ def plan_remesh(
 
 def scale_batch_or_steps(global_batch: int, old_dp: int, new_dp: int,
                          *, keep_global_batch: bool = True) -> tuple[int, int]:
-    """After shrinking DP from old_dp to new_dp, either keep the global batch
-    (per-worker batch grows — preserves convergence, costs memory) or keep the
-    per-worker batch (global batch shrinks — re-scale LR by the linear rule).
-    Returns (per_worker_batch, new_global_batch)."""
+    """After re-meshing DP from old_dp to new_dp (either direction), either
+    keep the global batch (per-worker batch scales inversely with the world —
+    preserves convergence, costs memory on shrink) or keep the per-worker
+    batch (global batch scales with the world — re-scale LR by the linear
+    rule).  Returns (per_worker_batch, new_global_batch).
+
+    Callers re-meshing more than once must always pass the ORIGINAL (base)
+    ``global_batch``, not the previous re-mesh's output: the ceil rounding
+    below is not idempotent, so feeding an inflated global batch back in
+    compounds the inflation and a shrink→grow round trip would no longer
+    restore the original per-worker batch (the engine's inverse-scaling
+    contract)."""
     per = global_batch // old_dp
     if keep_global_batch:
         # Distribute the remainder by rounding up: SPMD batches are uniform

@@ -1,0 +1,270 @@
+"""Real heartbeat transports feeding ``ElasticConfig.step_feed``.
+
+The elastic policy (``repro.distributed.elastic``) is pure: the
+:class:`HeartbeatMonitor` consumes ``{rank: (step, step_time)}`` events and
+never cares where they came from.  Tests inject fakes; a real fleet needs a
+transport.  Two are provided, sharing one contract:
+
+- ``emit(rank, step, step_time=None)`` — worker side, called once per train
+  step (the engine's health callback drives it via ``ElasticConfig.emitter``);
+- ``step_feed(global_step, world) -> {rank: (step, step_time)}`` — monitor
+  side, plug-compatible with ``ElasticConfig.step_feed``.  Only ranks that
+  reported IN SINCE THE LAST POLL are returned: a dead worker's stale beat
+  must not keep refreshing ``WorkerView.last_seen`` or the monitor could
+  never time it out;
+- ``snapshot() -> {rank: {"step", "age"}}`` — last-known beat per rank with
+  its wall-clock age, for post-mortem attribution (a survivor that caught a
+  collective failure asks the transport *who* went silent);
+- ``close()``.
+
+:class:`FileHeartbeatTransport` — same-host multi-process.  Each beat is an
+atomic ``os.replace`` of ``hb_<rank>.json`` in a shared directory; every
+process can both emit and poll, so all survivors of a worker loss reach the
+same verdict from the same files.
+
+:class:`TcpHeartbeatCollector` / :class:`TcpHeartbeatEmitter` — cross-host.
+The collector (rank 0) accepts newline-delimited JSON beats over TCP and is
+the only process that polls; emitters reconnect on failure, so a rebooted
+worker resumes announcing itself — which is exactly the signal the GROW
+planner waits for.
+
+Beats carry a per-emitter monotonically increasing ``seq`` so "reported in
+since the last poll" is well-defined even when the step counter repeats
+(e.g. a worker that restarts and re-announces step 0).
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import tempfile
+import threading
+import time
+
+
+def _beat(rank: int, step: int, step_time: float | None, seq: int) -> dict:
+    return {"rank": int(rank), "step": int(step), "step_time": step_time,
+            "seq": int(seq), "wall": time.time()}
+
+
+class FileHeartbeatTransport:
+    """Heartbeats as atomic per-rank JSON files in a shared directory."""
+
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+        self._seq: dict[int, int] = {}        # emitter side, per local rank
+        # Monitor side: prime the poll baseline with whatever beat files
+        # already exist, so they are NOT reported as fresh on the first
+        # poll.  A relaunched trainer reuses the shared directory, and a
+        # dead worker's stale file must not read as that worker "returning"
+        # — only a beat emitted AFTER this transport was built counts.
+        self._last_polled: dict[int, int] = {
+            rank: b["seq"] for rank, b in self._read_all().items()}
+
+    # -------------------------------------------------------------- emit side
+    def emit(self, rank: int, step: int, step_time: float | None = None) -> None:
+        seq = self._seq.get(rank, 0) + 1
+        self._seq[rank] = seq
+        fd, tmp = tempfile.mkstemp(prefix=f".hb_{rank}-", dir=self.dir)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(_beat(rank, step, step_time, seq), f)
+            os.replace(tmp, os.path.join(self.dir, f"hb_{rank}.json"))
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    # ----------------------------------------------------------- monitor side
+    def _read_all(self) -> dict[int, dict]:
+        beats = {}
+        for name in os.listdir(self.dir):
+            if not (name.startswith("hb_") and name.endswith(".json")):
+                continue
+            try:
+                with open(os.path.join(self.dir, name)) as f:
+                    b = json.load(f)
+                beats[int(b["rank"])] = b
+            except (OSError, ValueError, KeyError):
+                continue  # mid-replace or torn write: catch it next poll
+        return beats
+
+    def step_feed(self, global_step: int, world: int) -> dict:
+        """Ranks whose beat advanced since the last poll (ElasticConfig
+        contract).  Includes ranks OUTSIDE [0, world) — returned workers
+        announcing themselves, which the engine turns into a grow plan."""
+        out = {}
+        for rank, b in self._read_all().items():
+            if b["seq"] != self._last_polled.get(rank):
+                self._last_polled[rank] = b["seq"]
+                out[rank] = (b["step"], b.get("step_time"))
+        return out
+
+    def snapshot(self) -> dict[int, dict]:
+        now = time.time()
+        return {rank: {"step": b["step"], "age": now - b["wall"]}
+                for rank, b in self._read_all().items()}
+
+    def close(self) -> None:
+        pass
+
+
+class TcpHeartbeatCollector:
+    """Monitor half of the TCP transport: accepts beats, answers polls.
+
+    Binds immediately (``port=0`` picks a free one — read ``.port``); a
+    daemon thread accepts connections and one reader thread per emitter
+    drains newline-delimited JSON beats into the latest-beat table.  The
+    collector can also ``emit`` for its own local ranks directly — rank 0 is
+    a worker too and should not dial itself.
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0):
+        self._lock = threading.Lock()
+        self._beats: dict[int, dict] = {}
+        self._last_polled: dict[int, int] = {}
+        self._seq = 0
+        self._closed = False
+        self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._srv.bind((host, port))
+        self._srv.listen()
+        self.host, self.port = self._srv.getsockname()[:2]
+        self.address = f"{self.host}:{self.port}"
+        self._acceptor = threading.Thread(target=self._accept_loop, daemon=True)
+        self._acceptor.start()
+
+    def _accept_loop(self) -> None:
+        while not self._closed:
+            try:
+                conn, _ = self._srv.accept()
+            except OSError:
+                return  # socket closed
+            threading.Thread(target=self._drain, args=(conn,),
+                             daemon=True).start()
+
+    def _drain(self, conn: socket.socket) -> None:
+        buf = b""
+        with conn:
+            while True:
+                try:
+                    chunk = conn.recv(4096)
+                except OSError:
+                    return
+                if not chunk:
+                    return
+                buf += chunk
+                while b"\n" in buf:
+                    line, buf = buf.split(b"\n", 1)
+                    try:
+                        b = json.loads(line)
+                        self._store(int(b["rank"]), int(b["step"]),
+                                    b.get("step_time"))
+                    except (ValueError, KeyError):
+                        continue
+
+    def _store(self, rank: int, step: int, step_time: float | None) -> None:
+        with self._lock:
+            self._seq += 1
+            self._beats[rank] = _beat(rank, step, step_time, self._seq)
+
+    # ------------------------------------------------------ transport contract
+    def emit(self, rank: int, step: int, step_time: float | None = None) -> None:
+        self._store(rank, step, step_time)
+
+    def step_feed(self, global_step: int, world: int) -> dict:
+        out = {}
+        with self._lock:
+            for rank, b in self._beats.items():
+                if b["seq"] != self._last_polled.get(rank):
+                    self._last_polled[rank] = b["seq"]
+                    out[rank] = (b["step"], b.get("step_time"))
+        return out
+
+    def snapshot(self) -> dict[int, dict]:
+        now = time.time()
+        with self._lock:
+            return {rank: {"step": b["step"], "age": now - b["wall"]}
+                    for rank, b in self._beats.items()}
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self._srv.close()
+        except OSError:
+            pass
+
+
+class TcpHeartbeatEmitter:
+    """Worker half of the TCP transport.  Beats are fire-and-forget: a send
+    failure drops the beat and retries the connection on a later one —
+    silence IS the failure signal, so the emitter must never take the
+    training loop down with it.  After a failed dial the emitter backs off
+    (``retry_after`` seconds) before dialling again: against a PARTITIONED
+    collector (SYNs silently dropped) every connection attempt costs the
+    full ``connect_timeout``, and paying that inside the step loop on every
+    step would throttle training indefinitely."""
+
+    def __init__(self, address: str, *, connect_timeout: float = 2.0,
+                 retry_after: float = 5.0):
+        host, port = address.rsplit(":", 1)
+        self._addr = (host, int(port))
+        self._sock: socket.socket | None = None
+        self._connect_timeout = connect_timeout
+        self._retry_after = retry_after
+        self._next_dial = 0.0
+
+    def emit(self, rank: int, step: int, step_time: float | None = None) -> None:
+        line = (json.dumps({"rank": int(rank), "step": int(step),
+                            "step_time": step_time}) + "\n").encode()
+        for _ in range(2):  # current socket, then one fresh reconnect
+            if self._sock is None:
+                if time.monotonic() < self._next_dial:
+                    return  # backing off: drop the beat, stay fast
+                try:
+                    self._sock = socket.create_connection(
+                        self._addr, timeout=self._connect_timeout)
+                except OSError:
+                    # Only a failed DIAL arms the backoff: a failed SEND on
+                    # an established socket (collector restarted) must still
+                    # get its immediate fresh-reconnect attempt below.
+                    self._next_dial = time.monotonic() + self._retry_after
+                    return
+            try:
+                self._sock.sendall(line)
+                return
+            except OSError:
+                try:
+                    self._sock.close()
+                except OSError:
+                    pass
+                self._sock = None
+
+    def close(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+
+def make_transport(spec: str, *, serve: bool = False):
+    """Build a transport from a launcher flag.
+
+    ``file:/shared/dir``  -> :class:`FileHeartbeatTransport` (both halves).
+    ``tcp://host:port``   -> :class:`TcpHeartbeatCollector` when ``serve``
+    (the monitor process binds the address) else :class:`TcpHeartbeatEmitter`
+    (workers dial it).
+    """
+    if spec.startswith("file:"):
+        return FileHeartbeatTransport(spec[len("file:"):])
+    if spec.startswith("tcp://"):
+        addr = spec[len("tcp://"):]
+        if serve:
+            host, port = addr.rsplit(":", 1)
+            return TcpHeartbeatCollector(host=host, port=int(port))
+        return TcpHeartbeatEmitter(addr)
+    raise ValueError(f"unknown heartbeat transport {spec!r}; "
+                     "expected file:<dir> or tcp://<host>:<port>")

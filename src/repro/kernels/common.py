@@ -1,0 +1,15 @@
+"""Shared kernel-op plumbing."""
+from __future__ import annotations
+
+import jax
+
+
+def interpret_on_cpu() -> bool:
+    """Whether Pallas kernels should run in interpret mode (CPU container).
+
+    Resolved LAZILY at call time, never at import: reading the backend at
+    import would initialize jax before a multi-host launcher can call
+    ``jax.distributed.initialize()`` (models/kernels are imported long
+    before main runs).
+    """
+    return jax.default_backend() == "cpu"

@@ -6,15 +6,12 @@ stays False and the same call sites get the real kernel.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.common import interpret_on_cpu
 from repro.kernels.diffusion_conv.kernel import hop_project
 from repro.kernels.diffusion_conv.ref import diffusion_conv_ref
-
-_INTERPRET = jax.default_backend() == "cpu"
-
 
 def _pad_nodes(a: jnp.ndarray, n_pad: int, axes: tuple[int, ...]) -> jnp.ndarray:
     pads = [(0, 0)] * a.ndim
@@ -52,6 +49,6 @@ def diffusion_conv(
         for k in range(k_hops):
             z, y = hop_project(
                 s_p, z, wk[si, k].astype(x.dtype), y,
-                block_n=block_n, interpret=_INTERPRET,
+                block_n=block_n, interpret=interpret_on_cpu(),
             )
     return jnp.transpose(y[:n], (1, 0, 2)) + b

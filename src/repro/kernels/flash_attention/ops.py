@@ -1,14 +1,11 @@
 """Public flash-attention op: [B, S, H, D] layout adapter + padding + oracle."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import interpret_on_cpu
 from repro.kernels.flash_attention.kernel import flash_attention as _flash_kernel
 from repro.kernels.flash_attention.ref import flash_attention_ref
-
-_INTERPRET = jax.default_backend() == "cpu"
-
 
 def flash_attention(q, k, v, *, causal: bool = True, use_pallas: bool = False,
                     block_q: int = 256, block_k: int = 256):
@@ -30,5 +27,5 @@ def flash_attention(q, k, v, *, causal: bool = True, use_pallas: bool = False,
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
     out = _flash_kernel(qt, kt, vt, causal=causal, block_q=bq, block_k=bk,
-                        interpret=_INTERPRET)
+                        interpret=interpret_on_cpu())
     return jnp.swapaxes(out[:, :, :s], 1, 2)

@@ -1,14 +1,11 @@
 """Public linear-scan op with shape padding; oracle by default."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import interpret_on_cpu
 from repro.kernels.linear_scan.kernel import linear_scan as _linear_scan_kernel
 from repro.kernels.linear_scan.ref import linear_scan_ref
-
-_INTERPRET = jax.default_backend() == "cpu"
-
 
 def linear_scan(
     a: jnp.ndarray,
@@ -37,5 +34,5 @@ def linear_scan(
         a = jnp.pad(a, ((0, 0), (0, pad_s), (0, 0)), constant_values=1)
         b = jnp.pad(b, ((0, 0), (0, pad_s), (0, 0)))
     h_seq, h_last = _linear_scan_kernel(a, b, h0, chunk=chunk, block_b=block_b,
-                                        block_d=block_d, interpret=_INTERPRET)
+                                        block_d=block_d, interpret=interpret_on_cpu())
     return h_seq[:, :s], h_last

@@ -6,14 +6,12 @@ block size, and restoring the shape afterwards.  The batching layer
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.common import interpret_on_cpu
 from repro.kernels.window_gather.kernel import window_gather as _window_gather_kernel
 from repro.kernels.window_gather.ref import window_gather_ref
-
-_INTERPRET = jax.default_backend() == "cpu"
 
 _LANE = 128  # TPU lane width — last-dim blocks should be multiples of this
 
@@ -40,7 +38,7 @@ def window_gather(
     if pad:
         flat = jnp.pad(flat, ((0, 0), (0, pad)))
     out = _window_gather_kernel(flat, starts.astype(jnp.int32), span=span,
-                                block_c=block_c, interpret=_INTERPRET)
+                                block_c=block_c, interpret=interpret_on_cpu())
     out = out[..., :c]
     return out.reshape((starts.shape[0], span) + trailing)
 

@@ -15,7 +15,19 @@ launcher (env-configured coordinator) and each process trains from its own
 per-rank index feed (`DataPlane.feed(jax.process_index(), epoch)`) — no host
 ever materialises the global index grid.  `--elastic` attaches the
 heartbeat/re-mesh policy so worker loss shrinks the data axis and resumes
-from the latest checkpoint instead of killing the run.
+from the latest checkpoint instead of killing the run; when the worker
+returns, the inverse GROW plan re-admits it with the per-worker batch scaled
+back down.  `--heartbeat file:<dir>|tcp://host:port` replaces the simulated
+all-healthy feed with a REAL transport: every process emits its ranks' beats
+each step, and process 0 runs the monitor over them.
+
+Single-process runs re-mesh in place.  A real fleet cannot (a dead peer's
+shards are gone and its collectives would hang), so under
+`--init-distributed` use `--elastic-remesh relaunch`: on a re-mesh plan the
+process checkpoints, writes the plan to `--plan-out`, and exits with code 75
+(EX_TEMPFAIL) — the external launcher (e.g. tests/multihost.py's driver)
+tears the gang down and relaunches into the planned topology with the SAME
+--batch (the global batch is preserved; per-rank batches re-divide).
 
 Examples:
   python -m repro.launch.train --arch pgt-dcrnn-pems-all-la --nodes 200 \
@@ -23,6 +35,9 @@ Examples:
   python -m repro.launch.train --arch qwen1.5-4b --smoke --steps 100
   python -m repro.launch.train --arch dcrnn-pems --placement partitioned \
       --elastic --ckpt-dir /tmp/ck ...
+  python -m repro.launch.train --arch dcrnn-pems --init-distributed \
+      --elastic --elastic-remesh relaunch --heartbeat file:/shared/hb \
+      --ckpt-dir /shared/ck --plan-out /shared/plan.json ...
 """
 from __future__ import annotations
 
@@ -39,16 +54,17 @@ from repro.configs import get_arch
 from repro.core import IndexDataset, Placement, WindowSpec
 from repro.data import (gaussian_adjacency, make_token_stream, make_traffic_series,
                         random_sensor_coords, transition_matrices)
-from repro.distributed import latest_step
+from repro.distributed import latest_step, make_transport
 from repro.launch.mesh import make_host_mesh
 from repro.models import dcrnn, pgt_dcrnn
 from repro.models.lm import model as lm
 from repro.optim import AdamConfig, warmup_cosine
 from repro.pipeline import ElasticConfig, PipelineConfig, build_pipeline
-from repro.train.loop import TrainLoopConfig
+from repro.train.loop import RestartSignal, TrainLoopConfig
 
 
-def _train_stgnn(arch, args, adam, sched, loop: TrainLoopConfig):
+def _train_stgnn(arch, args, adam, sched, loop: TrainLoopConfig,
+                 sink: list | None = None):
     """Full pipeline path: placement-aware sampler/sharding/fused step."""
     mcfg = arch.model
     if args.nodes:
@@ -85,10 +101,16 @@ def _train_stgnn(arch, args, adam, sched, loop: TrainLoopConfig):
         step = latest_step(loop.ckpt_dir)
         if step is not None:
             print(f"resuming from step {step}")
-    return pipe.fit(resume=args.resume)
+    transport = _wire_heartbeat(pipe, args)
+    try:
+        return pipe.fit(resume=args.resume, history_sink=sink)
+    finally:
+        if transport is not None:
+            transport.close()
 
 
-def _train_lm(arch, args, adam, sched, loop: TrainLoopConfig):
+def _train_lm(arch, args, adam, sched, loop: TrainLoopConfig,
+              sink: list | None = None):
     """Token-stream windows (nodes==1 case) through the same pipeline: the
     ``lm`` gather entry reconstructs (tokens, shifted labels) on-device."""
     cfg = arch.smoke_config() if args.smoke else arch.lm
@@ -122,11 +144,86 @@ def _train_lm(arch, args, adam, sched, loop: TrainLoopConfig):
         step = latest_step(loop.ckpt_dir)
         if step is not None:
             print(f"resuming from step {step}")
-    return pipe.fit(resume=args.resume, eval_fn=None)
+    transport = _wire_heartbeat(pipe, args)
+    try:
+        return pipe.fit(resume=args.resume, eval_fn=None,
+                        history_sink=sink)
+    finally:
+        if transport is not None:
+            transport.close()
+
+
+#: Exit code for "re-mesh requested" in relaunch mode (EX_TEMPFAIL: the run
+#: is not broken, it wants to be relaunched into the planned topology).
+EX_REMESH = 75
 
 
 def _elastic_config(args) -> ElasticConfig | None:
-    return ElasticConfig() if args.elastic else None
+    if not args.elastic:
+        return None
+    return ElasticConfig(heartbeat_timeout=args.heartbeat_timeout,
+                         remesh=args.elastic_remesh,
+                         target_world=args.target_world or None)
+
+
+def _wire_heartbeat(pipe, args):
+    """Attach a real transport to an elastic pipeline: every process emits
+    beats for the feed ranks it owns; process 0 (the only process whose
+    monitor verdict matters — one decider, no split-brain) consumes them.
+    Returns the transport (caller closes it) or None."""
+    if not args.heartbeat or pipe.elastic is None:
+        return None
+    serve = jax.process_index() == 0
+    transport = make_transport(args.heartbeat, serve=serve)
+
+    def emitter(step: int) -> None:
+        # Re-read the topology every step: an in-process re-mesh changes the
+        # world mid-fit, and beating for a rank outside the current world
+        # would read as a returned worker.
+        ranks = pipe.dataplane.process_ranks
+        for r in (ranks if ranks is not None else range(pipe.world)):
+            transport.emit(r, step)
+
+    # step_feed only on process 0 even for the file transport (where every
+    # process COULD read the shared directory): one decider, or each process
+    # would flag the same death at a slightly different step and race
+    # divergent plans/checkpoint coordinates.
+    pipe.elastic = dataclasses.replace(
+        pipe.elastic, emitter=emitter,
+        step_feed=(transport.step_feed
+                   if serve and hasattr(transport, "step_feed")
+                   else pipe.elastic.step_feed))
+    return transport
+
+
+def _write_plan(args, sig) -> None:
+    """Relaunch mode: persist the re-mesh plan for the external launcher.
+
+    Process 0 only (it is the decider and the checkpoint writer, so its
+    (epoch, step) coordinates are the ones that match the durable
+    checkpoint), written atomically so the launcher can never read a torn
+    plan."""
+    if jax.process_index() != 0:
+        return
+    plan = sig.plan
+    out = {
+        "kind": plan.kind if plan is not None else "unknown",
+        "reason": str(plan.reason) if plan is not None else str(sig),
+        "dropped_workers": list(plan.dropped_workers) if plan else [],
+        "readmitted_workers": list(plan.readmitted_workers) if plan else [],
+        "mesh_shape": list(plan.mesh_shape) if plan else [],
+        "epoch": sig.epoch, "step": sig.step,
+    }
+    payload = json.dumps(out, indent=1)
+    if args.plan_out:
+        import os
+        import tempfile
+        fd, tmp = tempfile.mkstemp(
+            prefix=".plan-", dir=os.path.dirname(args.plan_out) or ".")
+        with os.fdopen(fd, "w") as f:
+            f.write(payload)
+        os.replace(tmp, args.plan_out)
+    print(f"re-mesh requested (exit {EX_REMESH}): {payload}")
 
 
 def main() -> None:
@@ -156,25 +253,61 @@ def main() -> None:
                          "rank's series shard (communication-free; see "
                          "launch/dryrun.py --halo-evidence)")
     ap.add_argument("--elastic", action="store_true",
-                    help="attach the heartbeat->plan_remesh->shrink-and-"
-                         "resume policy (needs --ckpt-dir).  NOTE: the "
-                         "default heartbeat transport simulates an "
-                         "all-healthy fleet; detecting real worker loss "
-                         "needs a collector wired to ElasticConfig."
-                         "step_feed (see tests/test_elastic_engine.py)")
+                    help="attach the heartbeat->plan_remesh->re-mesh-and-"
+                         "resume policy (needs --ckpt-dir).  Without "
+                         "--heartbeat the transport simulates an all-healthy "
+                         "fleet; pass a real transport to detect actual "
+                         "worker loss and return")
+    ap.add_argument("--heartbeat", default=None,
+                    help="real heartbeat transport: file:<shared-dir> "
+                         "(same-host multi-process) or tcp://host:port "
+                         "(process 0 binds it, workers dial in)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=60.0)
+    ap.add_argument("--elastic-remesh", default="inprocess",
+                    choices=["inprocess", "relaunch"],
+                    help="who executes a re-mesh plan: this process "
+                         "(single-host only) or an external launcher — the "
+                         "process then checkpoints, writes --plan-out and "
+                         f"exits {EX_REMESH}")
+    ap.add_argument("--target-world", type=int, default=0,
+                    help="grow ceiling: re-admit returned workers up to this "
+                         "world size.  0 = the world THIS process started "
+                         "with — after a relaunch that is the SHRUNK world, "
+                         "so a relaunching controller must pass the original "
+                         "fleet size explicitly or the fleet never grows "
+                         "back (see tests/multihost.py)")
+    ap.add_argument("--plan-out", default=None,
+                    help="relaunch mode: path for the re-mesh plan JSON")
     ap.add_argument("--init-distributed", action="store_true",
                     help="call jax.distributed.initialize() (env-configured "
                          "coordinator); each process then trains from its "
                          "own per-rank feed via jax.process_index()")
     ap.add_argument("--history-out", default=None)
     args = ap.parse_args()
-    if args.init_distributed and args.elastic:
-        # The elastic shrink path re-materialises the series on the host
+    if args.heartbeat and not args.elastic:
+        # Silently ignoring the transport would leave the operator believing
+        # health monitoring is active when nothing emits or collects beats.
+        raise SystemExit("--heartbeat requires --elastic: the transport only "
+                         "feeds the elastic heartbeat monitor")
+    if args.elastic and args.elastic_remesh == "relaunch" \
+            and not args.target_world:
+        print("warning: --elastic-remesh relaunch without --target-world — "
+              "growth is capped at this process's starting world; a "
+              "relaunching controller should pass the original fleet size")
+    if args.init_distributed and args.elastic \
+            and args.elastic_remesh != "relaunch":
+        # The in-process re-mesh path re-materialises the series on the host
         # (DataPlane.remesh), which needs every shard addressable — true on
-        # one process, not on a real fleet.  See ROADMAP (multi-host elastic).
-        raise SystemExit("--elastic with --init-distributed is not supported "
-                         "yet: the shrink path restores on a single host")
+        # one process, not on a real fleet.
+        raise SystemExit("--elastic with --init-distributed needs "
+                         "--elastic-remesh relaunch: a fleet re-meshes by "
+                         "relaunching into the planned topology")
     if args.init_distributed:
+        # CPU fleets need gloo for cross-process collectives: the default
+        # CPU client ships NO collectives implementation, so psums would
+        # fail outright once the mesh spans processes.  Must be set before
+        # the backend is first touched; harmless on accelerator fleets.
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
         jax.distributed.initialize()
         print(f"jax.distributed: process {jax.process_index()} of "
               f"{jax.process_count()} (per-rank feed selection active)")
@@ -188,10 +321,28 @@ def main() -> None:
                            ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
 
     t0 = time.perf_counter()
-    if arch.family == "stgnn":
-        state, history = _train_stgnn(arch, args, adam, sched, loop)
-    else:
-        state, history = _train_lm(arch, args, adam, sched, loop)
+    # The sink mirrors every logged row as it lands, so the rows survive the
+    # crash paths too — a peer death surfaces as a plain collective error,
+    # not a RestartSignal, and --history-out must still capture the run.
+    sink: list = []
+    try:
+        if arch.family == "stgnn":
+            state, history = _train_stgnn(arch, args, adam, sched, loop, sink)
+        else:
+            state, history = _train_lm(arch, args, adam, sched, loop, sink)
+    except RestartSignal as sig:
+        # relaunch-mode elastic: the state is already checkpointed with its
+        # (epoch, done_in_epoch) coordinates; hand the plan to the launcher.
+        _write_plan(args, sig)
+        if args.history_out:
+            with open(args.history_out, "w") as f:
+                json.dump(sig.history, f, indent=1)
+        raise SystemExit(EX_REMESH)
+    except BaseException:
+        if args.history_out and sink:
+            with open(args.history_out, "w") as f:
+                json.dump(sink, f, indent=1)
+        raise
     wall = time.perf_counter() - t0
     final = [h for h in history if "loss" in h]
     if final:

@@ -217,13 +217,16 @@ class DataPlane:
 
     # --------------------------------------------------------------- elastic
     def remesh(self, mesh: Mesh, *, world: int, batch_per_rank: int) -> "DataPlane":
-        """Rebuild this data plane for a new topology (elastic shrink).
+        """Rebuild this data plane for a new topology (elastic shrink OR
+        grow — the direction only changes the mesh/world handed in).
 
         Re-places the series via ``series_sharding`` on the new mesh and
         rebuilds the sampler for the new world size; the dataset's windows,
         splits and scaler are untouched so (seed, epoch) determinism holds.
         Single-host only: re-materialising the series needs every shard
-        addressable (a real multi-process fleet would re-read from storage).
+        addressable (a real multi-process fleet relaunches instead —
+        ``ElasticConfig(remesh="relaunch")`` — and the new gang re-places
+        from storage).
         """
         config = dataclasses.replace(self.config, world=world,
                                      batch_per_rank=batch_per_rank)

@@ -67,12 +67,33 @@ class ElasticConfig:
     the heartbeat transport: which workers reported in since the last step.
     None (the default) simulates an all-healthy fleet — every rank beats
     every step — which is correct for single-process runs and lets tests
-    inject faults by omitting ranks (and driving ``clock``) instead.
+    inject faults by omitting ranks (and driving ``clock``) instead.  Real
+    transports live in :mod:`repro.distributed.transport`.  A beat from a
+    rank OUTSIDE the current world is a dropped worker announcing its
+    return: the engine plans the inverse GROW re-mesh (up to
+    ``target_world``, defaulting to the world the engine was built with) and
+    the per-worker batch scales back down against the BASE global batch —
+    shrink and grow round-trip to the original topology.
+
+    ``emitter(global_step)`` is the worker-side half of a real transport:
+    called once per step so THIS process's ranks heartbeat out (wire it to
+    ``transport.emit``); None for single-process fakes.
+
+    ``remesh`` selects who executes a plan: ``"inprocess"`` (default) has
+    the engine shrink/grow the mesh and resume inside this process — valid
+    single-host, where every shard stays addressable; ``"relaunch"`` makes
+    :meth:`Engine.fit` re-raise the checkpoint-annotated
+    :class:`RestartSignal` so an external launcher can tear the gang down
+    and relaunch into the planned topology (the only sound option under a
+    real ``jax.distributed`` fleet, where a dead peer's shards are gone and
+    the next collective would hang).
 
     On shrink with ``keep_global_batch=True`` the per-worker batch is
     ``ceil(global/new_dp)``, so the global batch can GROW by up to
     ``new_dp − 1`` windows (no ragged trim exists — uniform SPMD batches);
     ``False`` keeps the per-worker batch and shrinks the global batch.
+    Both directions always re-scale from the engine's BASE global batch, so
+    repeated re-meshes never compound the ceil rounding.
     """
 
     check_every: int = 1           # poll the monitor every N steps
@@ -80,10 +101,19 @@ class ElasticConfig:
     straggler_factor: float = 3.0
     model_parallel: int = 1        # TP group size, kept whole by plan_remesh
     chips_per_host: int = 1
-    keep_global_batch: bool = True  # scale_batch_or_steps policy on shrink
+    keep_global_batch: bool = True  # scale_batch_or_steps policy on re-mesh
     max_restarts: int = 8
     clock: Callable[[], float] = time.monotonic
     step_feed: Callable[[int, int], dict] | None = None
+    emitter: Callable[[int], None] | None = None
+    target_world: int | None = None  # grow ceiling; None = the build world
+    remesh: str = "inprocess"      # or "relaunch" (external launcher re-meshes)
+    # A returned worker must announce on this many polls (and still be
+    # fresh) before a grow is planned — one stray beat from a crash-looping
+    # host must not trigger a grow that immediately shrinks back.  The
+    # launcher owns any stronger quarantine policy (e.g. exponential rejoin
+    # backoff across relaunches); this is the in-process debounce.
+    readmit_after_beats: int = 3
 
 
 @dataclasses.dataclass
@@ -98,6 +128,15 @@ class Engine:
     elastic: ElasticConfig | None = None
     # One record per elastic restart: the plan plus the resume coordinates.
     restarts: list = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        # The BASE topology: re-mesh scaling is always computed against it
+        # (never against the previous re-mesh's inflated output) and grow
+        # plans re-expand its mesh — a shrink→grow round trip restores the
+        # original (mesh, world, per-worker batch) exactly.
+        self._base_mesh = self.dataplane.mesh
+        self._base_world = self.dataplane.world
+        self._base_global_batch = self.dataplane.global_batch
 
     # ------------------------------------------- legacy Pipeline surface
     @property
@@ -149,26 +188,42 @@ class Engine:
         epochs: int | None = None,
         eval_fn: Callable[[Any], dict] | None | str = "auto",
         resume: bool = True,
+        history_sink: list | None = None,
     ) -> tuple[Any, list[dict]]:
         """Train (resuming from ``loop.ckpt_dir`` when a checkpoint exists).
 
         Returns ``(state, history)`` exactly like ``run_training``.
         ``eval_fn="auto"`` evaluates val-split MAE at every epoch end.  With
         an :class:`ElasticConfig` attached, worker loss mid-run triggers a
-        shrink-and-resume instead of killing the run (requires ``ckpt_dir``).
+        re-mesh-and-resume instead of killing the run (requires ``ckpt_dir``).
+        ``history_sink`` mirrors every logged row into a caller-owned list
+        that survives non-elastic crashes (see ``run_training``).
+
+        Under ``jax.distributed``, every process restores from ``ckpt_dir``
+        but only process 0 writes to it — one writer, no torn manifests.
         """
         loop = self.config.loop
         if epochs is not None:
             loop = dataclasses.replace(loop, epochs=epochs)
         if self.elastic is not None and not loop.ckpt_dir:
-            raise ValueError("elastic fit needs loop.ckpt_dir: the shrink "
+            raise ValueError("elastic fit needs loop.ckpt_dir: the re-mesh "
                              "path restores from the latest checkpoint")
+        if (self.elastic is not None and self.elastic.remesh == "inprocess"
+                and jax.process_count() > 1):
+            raise ValueError(
+                "elastic remesh='inprocess' cannot run under jax.distributed: "
+                "a dead peer's shards are unaddressable and its collectives "
+                "would hang; use ElasticConfig(remesh='relaunch') so the "
+                "launcher tears the gang down and relaunches into the "
+                "planned topology (see tests/multihost.py)")
         # Copy params into the fresh state: the jitted step donates its state
         # argument, and aliasing the caller's arrays would delete them after
         # the first step (breaking re-fits and sibling pipelines).
         params = jax.tree.map(jnp.copy, self.init_params)
         state = init_train_state(params, self.config.adam)
-        checkpointer = Checkpointer(loop.ckpt_dir) if loop.ckpt_dir else None
+        checkpointer = (Checkpointer(loop.ckpt_dir)
+                        if loop.ckpt_dir and jax.process_index() == 0
+                        else None)
         start_step, start_epoch, start_done = 0, 0, None
         if resume and loop.ckpt_dir and latest_step(loop.ckpt_dir) is not None:
             state, start_step = restore(loop.ckpt_dir, state)
@@ -208,11 +263,18 @@ class Engine:
                     start_step=start_step,
                     start_done_in_epoch=start_done,
                     health_cb=self._health_cb(monitor),
+                    history_sink=history_sink,
                 )
                 history.extend(hist)
                 return state, history
             except RestartSignal as sig:
                 history.extend(sig.history)
+                if self.elastic.remesh == "relaunch":
+                    # The external launcher owns re-meshing: run_training
+                    # already checkpointed the in-flight state with its
+                    # (epoch, done_in_epoch) coordinates, so hand the
+                    # annotated signal (plan + resume coordinates) up.
+                    raise
                 if restarts_this_fit >= self.elastic.max_restarts:
                     raise RuntimeError(
                         f"elastic restart budget exhausted "
@@ -221,6 +283,17 @@ class Engine:
                 state, start_epoch, start_step, start_done = \
                     self._apply_plan(sig, loop)
                 monitor = self._make_monitor()
+            except BaseException:
+                # A non-elastic failure (e.g. a collective erroring out when
+                # a real peer died) must not strand the in-flight async
+                # checkpoint write: flush it so a relaunch resumes from the
+                # newest durable step instead of one step earlier.
+                if checkpointer is not None:
+                    try:
+                        checkpointer.wait()
+                    except Exception:
+                        pass
+                raise
 
     # ------------------------------------------------------------- evaluation
     def evaluate(self, params, *, split: str = "val", max_batches: int = 4) -> float:
@@ -257,20 +330,59 @@ class Engine:
             return None
         el = self.elastic
         world = self.world
+        target = el.target_world or self._base_world
+        returned: dict[int, list] = {}  # rank -> [poll count, last clock]
+        announced: set[int] = set()     # out-of-world beats since last poll
 
         def cb(global_step: int) -> None:
+            if el.emitter is not None:
+                try:
+                    el.emitter(global_step)  # this process's ranks beat out
+                except OSError:
+                    # Fire-and-forget, like the transports themselves: a
+                    # transient emit failure (NFS stall, ENOSPC) makes this
+                    # worker look late to the MONITOR — it must not crash a
+                    # healthy training process.
+                    pass
             beats = (el.step_feed(global_step, world)
                      if el.step_feed is not None
                      else {r: (global_step, None) for r in range(world)})
             for rank, (step, step_time) in beats.items():
                 if rank in monitor.workers:
                     monitor.beat(rank, step, step_time)
+                else:
+                    # A beat from outside the current world: a dropped
+                    # worker announcing its return.  REJOIN CONTRACT: the
+                    # announcement must use the TARGET fleet's numbering
+                    # (anything ≥ world) — a rebooted host re-using an id
+                    # below the current world is indistinguishable from the
+                    # live rank that now owns that id, so the launcher's
+                    # rejoin agent assigns out-of-world ids (see
+                    # tests/multihost.py's announcer).
+                    announced.add(rank)
             if el.check_every > 1 and global_step % el.check_every:
                 return
+            # A returned worker is only re-admitted once it has announced
+            # across ``readmit_after_beats`` DISTINCT decision polls AND is
+            # still fresh: a worker that beat once and went silent — or a
+            # crash-looping host burst-announcing inside one poll window —
+            # is flapping, and growing toward it would just shrink right
+            # back, burning restart budget each time.
+            now = el.clock()
+            for rank in announced:
+                seen = returned.setdefault(rank, [0, 0.0])
+                seen[0] += 1
+                seen[1] = now
+            announced.clear()
             unhealthy = monitor.unhealthy()
-            if not unhealthy:
+            fresh = sorted(r for r, (n, t) in returned.items()
+                           if n >= el.readmit_after_beats
+                           and now - t <= el.heartbeat_timeout)
+            recovered = (fresh[: target - world]
+                         if not unhealthy and world < target else [])
+            if not unhealthy and not recovered:
                 return
-            plan = plan_remesh(world, unhealthy,
+            plan = plan_remesh(world, unhealthy, recovered=recovered,
                                model_parallel=el.model_parallel,
                                chips_per_host=el.chips_per_host)
             if plan is not None:
@@ -280,7 +392,13 @@ class Engine:
 
     def _apply_plan(self, sig: RestartSignal, loop
                     ) -> tuple[Any, int, int, int]:
-        """Shrink to the plan's mesh and restore the latest checkpoint.
+        """Re-mesh to the plan's topology and restore the latest checkpoint.
+
+        Shrink plans drop the plan's dead workers; grow plans re-admit the
+        plan's returned workers (capped at ``target_world``) and
+        inverse-apply the batch scaling.  Both directions re-scale against
+        the BASE global batch and carve the new mesh out of the BASE mesh,
+        so shrink→grow restores the original topology exactly.
 
         Returns ``(state, start_epoch, start_step, start_done_in_epoch)``:
         the same (seed, epoch) and completed-step count within the
@@ -293,13 +411,19 @@ class Engine:
         plan = sig.plan
         old_spe = self.steps_per_epoch
         # Workers ARE data-parallel ranks here, so the new world is simply
-        # the surviving-rank count.  (plan.mesh_shape[0] counts TP GROUPS —
-        # the same number only when model_parallel == chips_per_host.)
-        new_world = self.world - len(set(plan.dropped_workers))
+        # the surviving (or re-admitted) rank count.  (plan.mesh_shape[0]
+        # counts TP GROUPS — the same number only when model_parallel ==
+        # chips_per_host.)
+        if plan.kind == "grow":
+            target = el.target_world or self._base_world
+            new_world = min(self.world + len(set(plan.readmitted_workers)),
+                            target)
+        else:
+            new_world = self.world - len(set(plan.dropped_workers))
         per_new, _ = scale_batch_or_steps(
-            self.global_batch, old_dp=self.world, new_dp=new_world,
-            keep_global_batch=el.keep_global_batch)
-        new_mesh = shrink_mesh(self.mesh, new_world)
+            self._base_global_batch, old_dp=self._base_world,
+            new_dp=new_world, keep_global_batch=el.keep_global_batch)
+        new_mesh = shrink_mesh(self._base_mesh, new_world)
         self.dataplane = self.dataplane.remesh(
             new_mesh, world=new_world, batch_per_rank=per_new)
         self.train_step, self._eval_loss = _compile(
@@ -317,8 +441,8 @@ class Engine:
         done = max(int(meta.get("done_in_epoch", ckpt_step - epoch * old_spe)),
                    0)
         self.restarts.append({
-            "plan": plan, "epoch": epoch, "step": ckpt_step,
-            "world": new_world, "batch_per_rank": per_new,
+            "plan": plan, "kind": plan.kind, "epoch": epoch,
+            "step": ckpt_step, "world": new_world, "batch_per_rank": per_new,
             "global_batch": self.global_batch,
         })
         return state, epoch, ckpt_step, done

@@ -146,6 +146,7 @@ def run_training(
     start_step: int = 0,
     start_done_in_epoch: int | None = None,
     health_cb: Callable[[int], None] | None = None,
+    history_sink: list | None = None,
 ) -> tuple[Any, list[dict]]:
     """Generic epoch loop.
 
@@ -172,10 +173,21 @@ def run_training(
     flagging a dead worker), in which case the loop checkpoints the current
     state with its (epoch, done_in_epoch) coordinates, annotates the signal,
     and re-raises for the engine to re-mesh and resume.
+
+    ``history_sink``: optional caller-owned list mirroring every history row
+    as it is logged.  Unlike the returned history it survives NON-elastic
+    failures (a collective erroring out when a peer process dies raises
+    straight through), so an external launcher can still persist the rows
+    logged before the crash.
     """
     history: list[dict] = []
     global_step = start_step
     grid_of_epoch = getattr(sampler, "epoch_grid", sampler.epoch_global)
+
+    def log_row(row: dict) -> None:
+        history.append(row)
+        if history_sink is not None:
+            history_sink.append(row)
 
     def epoch_meta(epoch: int, done: int, steps: int) -> dict:
         """Checkpoint coordinates, normalised so a COMPLETE epoch reads as
@@ -221,7 +233,7 @@ def run_training(
             global_step += 1
             if loop.log_every and global_step % loop.log_every == 0:
                 m = {k: float(v) for k, v in metrics.items()}
-                history.append({"step": global_step, "epoch": epoch, **m})
+                log_row({"step": global_step, "epoch": epoch, **m})
             if (checkpointer is not None and loop.ckpt_every
                     and global_step % loop.ckpt_every == 0):
                 checkpointer.save(
@@ -236,7 +248,7 @@ def run_training(
                          "loss": float(metrics["loss"])}
         if eval_fn is not None:
             epoch_metrics.update(eval_fn(state))
-        history.append(epoch_metrics)
+        log_row(epoch_metrics)
         # The final step's health poll runs AFTER the epoch summary: a
         # restart landing exactly on the epoch boundary would otherwise
         # abort before the summary/eval row and the resumed run — which

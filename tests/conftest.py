@@ -119,3 +119,83 @@ def rng():
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------- multi-host harness kit
+# Fixtures for tests that drive REAL subprocesses (tests/multihost.py): the
+# pytest process itself has already initialised a single-CPU jax backend, so
+# every jax.distributed participant must be a fresh subprocess with its own
+# XLA_FLAGS/coordinator env — these fixtures own that plumbing.
+
+@pytest.fixture
+def free_port():
+    """Callable returning an OS-assigned free TCP port (coordinator/transport
+    addresses for subprocess fleets)."""
+    import socket
+
+    def get() -> int:
+        with socket.socket() as s:
+            s.bind(("127.0.0.1", 0))
+            return s.getsockname()[1]
+
+    return get
+
+
+@pytest.fixture(scope="session")
+def repo_root():
+    import os
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="session")
+def results_dir(repo_root):
+    """``results/`` at the repo root — where harnesses drop the JSON evidence
+    files CI uploads as artifacts."""
+    import os
+    d = os.path.join(repo_root, "results")
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+@pytest.fixture
+def mh_spawn(repo_root):
+    """Launch ``tests/multihost.py`` subprocess roles (worker / announce).
+
+    Returns ``spawn(argv, *, devices, log) -> subprocess.Popen``: PYTHONPATH
+    points at ``src``, XLA_FLAGS forces ``devices`` CPU devices, and stdout/
+    stderr append to the ``log`` file (pipes would deadlock on XLA's crash
+    dumps, and the files double as CI artifacts).  Every spawned process is
+    terminated at fixture teardown so a failing driver can't leak a fleet.
+    """
+    import os
+    import subprocess
+    import sys
+
+    procs: list[subprocess.Popen] = []
+    logs: list = []
+    script = os.path.join(repo_root, "tests", "multihost.py")
+
+    def spawn(argv, *, devices: int = 1, log: str | None = None):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(repo_root, "src") + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={devices}")
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        if log is not None:
+            sink = open(log, "a")
+            logs.append(sink)
+        else:
+            sink = subprocess.DEVNULL
+        p = subprocess.Popen([sys.executable, script, *[str(a) for a in argv]],
+                             env=env, stdout=sink, stderr=subprocess.STDOUT)
+        procs.append(p)
+        return p
+
+    yield spawn
+    for p in procs:
+        if p.poll() is None:
+            p.kill()
+            p.wait()
+    for f in logs:
+        f.close()

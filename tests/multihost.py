@@ -1,0 +1,400 @@
+"""True multi-process ``jax.distributed`` harness for the elastic pipeline.
+
+Everything the elastic chain claims is proven here on REAL processes — the
+first time the repo's distributed data plane runs outside a single-host
+simulation:
+
+- N CPU processes join a real ``jax.distributed`` gang (gloo collectives,
+  coordinator on a driver-chosen free port, one XLA-forced CPU device each);
+- each process trains from its OWN per-rank feed
+  (``DataPlane.process_ranks`` → ``make_array_from_process_local_data``) —
+  no process ever materialises the global index grid;
+- heartbeats ride the real file transport (``hb_<rank>.json`` in the shared
+  run dir), not an injected fake;
+- a worker is killed mid-epoch: the next collective on the survivor errors
+  out ("connection closed by peer"), the survivor attributes the death via
+  transport staleness, checkpoints are already durable to the failed step
+  (``ckpt_every=1`` + the engine's crash-path flush), and it exits with the
+  shrink verdict for the driver (the external launcher) to act on;
+- the driver relaunches the survivor alone (world 1, per-rank batch
+  inverse-scaled up, same GLOBAL batch) and it resumes at the same
+  (seed, epoch, step);
+- the dead worker "returns" (an announcer process heartbeating its rank from
+  outside the shrunk world); the running trainer plans the GROW re-mesh and
+  exits for relaunch;
+- the driver relaunches the full 2-process gang (per-rank batch scaled back
+  down) which finishes the run.
+
+The device-level topology is held constant across phases (2 devices total:
+2 procs × 1 dev, or 1 proc × 2 forced devs) so every phase compiles the
+same partitioned program over the same global batch — which is what makes
+the headline assertion possible: the merged loss trajectory of the
+interrupted, re-meshed run is **bit-identical** to an uninterrupted
+single-host run.
+
+Run it:  ``python -m pytest -q tests/multihost.py``  (not collected by the
+tier-1 suite — the driver spawns ~7 jax subprocesses and takes ~1 min).
+The driver writes ``results/multihost_evidence.json`` for CI artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import pytest
+
+# ----------------------------------------------------------------- constants
+ENTRIES, NODES = 120, 3
+GLOBAL_BATCH = 4
+FLEET = 2            # the full gang: 2 real processes
+SEED = 7
+EPOCHS = 2
+DIE_AT_STEP = 7      # mid-epoch 0 (20 steps per epoch)
+HB_TIMEOUT = 1.5     # seconds of real-clock silence = dead
+STEP_DELAY = 0.1     # paces the loop so the driver can react mid-run
+EXIT_REMESH = 75     # "relaunch me into the planned topology"
+EXIT_KILLED = 17     # the victim's deliberate crash
+
+
+# ===================================================================== worker
+def _run_worker(args: argparse.Namespace) -> None:
+    """One training process.  Under ``--nprocs > 1`` it joins the
+    jax.distributed gang; exit codes tell the driver what happened."""
+    import jax
+
+    if args.nprocs > 1:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+        jax.distributed.initialize(f"127.0.0.1:{args.coordinator_port}",
+                                   args.nprocs, args.rank)
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import Placement, WindowSpec
+    from repro.data import make_traffic_series
+    from repro.distributed.transport import FileHeartbeatTransport
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import AdamConfig
+    from repro.pipeline import ElasticConfig, PipelineConfig, build_pipeline
+    from repro.train import TrainLoopConfig
+    from repro.train.loop import RestartSignal
+
+    out = args.out
+    hb = FileHeartbeatTransport(os.path.join(out, "hb"))
+    is_writer = jax.process_index() == 0
+
+    def loss_fn(p, x, y):
+        return jnp.mean((x[:, -1] * p["w"] - y[:, 0]) ** 2), {}
+
+    params = {"w": jnp.full((NODES, 2), 0.1, jnp.float32)}
+    owned: list[int] = []
+
+    def emitter(step: int) -> None:
+        time.sleep(args.step_delay)
+        for r in owned:
+            hb.emit(r, step)
+        if args.die_at_step and step >= args.die_at_step:
+            os._exit(EXIT_KILLED)  # simulated crash: beats stop, sockets drop
+
+    elastic = None
+    if args.elastic:
+        elastic = ElasticConfig(
+            heartbeat_timeout=args.hb_timeout,
+            emitter=emitter,
+            step_feed=hb.step_feed if is_writer else None,
+            remesh="relaunch",
+            target_world=args.target_world or None)
+
+    pipe = build_pipeline(
+        make_traffic_series(ENTRIES, NODES), WindowSpec(horizon=2, input_len=2),
+        make_host_mesh(), loss_fn, params,
+        PipelineConfig(batch_per_rank=args.batch_per_rank,
+                       placement=Placement.REPLICATED, world=args.world,
+                       seed=SEED, adam=AdamConfig(lr=1e-2),
+                       loop=TrainLoopConfig(epochs=EPOCHS, log_every=1,
+                                            ckpt_every=1,
+                                            ckpt_dir=os.path.join(out, "ck"))),
+        elastic=elastic)
+    ranks = pipe.dataplane.process_ranks
+    owned.extend(ranks if ranks is not None else range(pipe.world))
+
+    sink: list[dict] = []
+    outcome: dict = {"phase": args.phase, "world": args.world,
+                     "nprocs": args.nprocs, "rank": args.rank,
+                     "batch_per_rank": args.batch_per_rank,
+                     "process_ranks": list(owned)}
+    code = 0
+    try:
+        _, history = pipe.fit(eval_fn=None, resume=True, history_sink=sink)
+        outcome["status"] = "done"
+    except RestartSignal as sig:
+        plan = sig.plan
+        outcome.update({
+            "status": "remesh", "kind": plan.kind, "reason": plan.reason,
+            "dropped_workers": list(plan.dropped_workers),
+            "readmitted_workers": list(plan.readmitted_workers),
+            "epoch": sig.epoch, "step": sig.step,
+        })
+        code = EXIT_REMESH
+    except Exception as e:
+        # A collective died under us: a peer is gone.  The engine already
+        # flushed the in-flight checkpoint; attribute the death through the
+        # transport (whose beats went silent?) and hand the driver a shrink
+        # verdict.
+        others = [r for r in range(args.world) if r not in owned]
+        deadline = time.time() + 4 * args.hb_timeout
+        dead: list[int] = []
+        while time.time() < deadline and not dead:
+            snap = hb.snapshot()
+            dead = [r for r in others
+                    if r not in snap or snap[r]["age"] > args.hb_timeout]
+            if not dead:
+                time.sleep(0.15)
+        outcome.update({"status": "peer-failure",
+                        "error": f"{type(e).__name__}: {e}"[:300],
+                        "dead_workers": dead or others})
+        code = EXIT_REMESH
+    if is_writer:
+        steps = [h["step"] for h in sink if "epoch_time_s" not in h]
+        outcome["steps"] = [min(steps), max(steps)] if steps else []
+        with open(os.path.join(out, f"history_{args.phase}.json"), "w") as f:
+            json.dump(sink, f)
+            f.flush()
+            os.fsync(f.fileno())
+        with open(os.path.join(out, f"outcome_{args.phase}.json"), "w") as f:
+            json.dump(outcome, f)
+            f.flush()
+            os.fsync(f.fileno())
+    sys.stdout.flush()
+    sys.stderr.flush()
+    # os._exit: after a peer death, jax.distributed's shutdown barrier would
+    # abort the process and scramble the exit code the driver relies on.
+    os._exit(code)
+
+
+# ================================================================== announcer
+def _run_announcer(args: argparse.Namespace) -> None:
+    """The returned worker's rejoin agent: heartbeat a rank from OUTSIDE the
+    running world until the trainer plans the grow (driver kills us)."""
+    from repro.distributed.transport import FileHeartbeatTransport
+
+    hb = FileHeartbeatTransport(os.path.join(args.out, "hb"))
+    step = 0
+    while True:
+        hb.emit(args.rank, step)
+        step += 1
+        time.sleep(0.1)
+
+
+# =================================================================== driver
+def _wait(proc, *, timeout: float, what: str) -> int:
+    try:
+        return proc.wait(timeout=timeout)
+    except Exception:
+        proc.kill()
+        proc.wait()
+        pytest.fail(f"{what} did not finish within {timeout}s")
+
+
+def _read_json(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _losses(history: list[dict]) -> dict[int, float]:
+    return {h["step"]: h["loss"] for h in history
+            if "loss" in h and "epoch_time_s" not in h}
+
+
+def _hb_step(run: str, rank: int) -> int:
+    try:
+        return _read_json(os.path.join(run, "hb", f"hb_{rank}.json"))["step"]
+    except (OSError, ValueError, KeyError):
+        return -1
+
+
+def _worker_argv(*, phase: str, out: str, rank: int = 0, nprocs: int = 1,
+                 world: int, batch_per_rank: int, port: int = 0,
+                 elastic: bool = True, die_at: int = 0,
+                 target_world: int = 0) -> list:
+    argv = ["worker", "--phase", phase, "--out", out, "--rank", rank,
+            "--nprocs", nprocs, "--coordinator-port", port,
+            "--world", world, "--batch-per-rank", batch_per_rank,
+            "--hb-timeout", HB_TIMEOUT, "--step-delay", STEP_DELAY]
+    if elastic:
+        argv.append("--elastic")
+    if die_at:
+        argv += ["--die-at-step", die_at]
+    if target_world:
+        argv += ["--target-world", target_world]
+    return argv
+
+
+def test_elastic_grow_and_resume_on_real_processes(tmp_path, free_port,
+                                                   mh_spawn, results_dir):
+    """Worker death → shrink → resume at the same (seed, epoch, step) →
+    worker return → grow with inverse batch scaling → losses bit-identical
+    to an uninterrupted single-host run.  ~1 min, 7 subprocesses."""
+    ref = str(tmp_path / "ref")
+    run = str(tmp_path / "run")
+    os.makedirs(ref)
+    os.makedirs(run)
+
+    # ---- reference: uninterrupted single-host run, same 2-device program
+    p = mh_spawn(_worker_argv(phase="ref", out=ref, world=FLEET,
+                              batch_per_rank=GLOBAL_BATCH // FLEET,
+                              elastic=False),
+                 devices=2, log=os.path.join(ref, "ref.log"))
+    assert _wait(p, timeout=240, what="reference run") == 0
+    ref_hist = _read_json(os.path.join(ref, "history_ref.json"))
+    ref_losses = _losses(ref_hist)
+    total_steps = max(ref_losses)
+
+    # ---- phase A: the real 2-process jax.distributed gang; rank 1 dies
+    port = free_port()
+    argv = dict(out=run, nprocs=FLEET, world=FLEET,
+                batch_per_rank=GLOBAL_BATCH // FLEET, port=port,
+                target_world=FLEET)
+    p0 = mh_spawn(_worker_argv(phase="a", rank=0, **argv),
+                  devices=1, log=os.path.join(run, "a0.log"))
+    p1 = mh_spawn(_worker_argv(phase="a", rank=1, die_at=DIE_AT_STEP, **argv),
+                  devices=1, log=os.path.join(run, "a1.log"))
+    assert _wait(p1, timeout=240, what="phase A victim") == EXIT_KILLED
+    assert _wait(p0, timeout=240, what="phase A survivor") == EXIT_REMESH
+    out_a = _read_json(os.path.join(run, "outcome_a.json"))
+    assert out_a["status"] == "peer-failure"
+    assert out_a["dead_workers"] == [1]
+    hist_a = _read_json(os.path.join(run, "history_a.json"))
+    losses_a = _losses(hist_a)
+    assert max(losses_a) == DIE_AT_STEP  # crashed at the very next step
+
+    # ---- phase B: survivor relaunched alone — world 1, per-rank batch
+    #      inverse-scaled UP (global batch preserved), resumes mid-epoch.
+    #      The heartbeat dir is deliberately NOT cleaned: the dead worker's
+    #      stale hb_1.json is still there, and the relaunched trainer must
+    #      not misread it as the worker having returned (the transport
+    #      primes its poll baseline with pre-existing files).
+    pb = mh_spawn(_worker_argv(phase="b", out=run, world=1,
+                               batch_per_rank=GLOBAL_BATCH,
+                               target_world=FLEET),
+                  devices=2, log=os.path.join(run, "b.log"))
+    # once the survivor has visibly resumed, the dead worker "returns"
+    deadline = time.time() + 120
+    while _hb_step(run, 0) < DIE_AT_STEP + 3:
+        assert time.time() < deadline, "phase B never advanced past resume"
+        assert pb.poll() is None, "phase B exited before the worker returned"
+        time.sleep(0.1)
+    ann = mh_spawn(["announce", "--out", run, "--rank", 1])
+    assert _wait(pb, timeout=240, what="phase B trainer") == EXIT_REMESH
+    ann.kill()
+    out_b = _read_json(os.path.join(run, "outcome_b.json"))
+    assert out_b["status"] == "remesh" and out_b["kind"] == "grow"
+    assert out_b["readmitted_workers"] == [1]
+    hist_b = _read_json(os.path.join(run, "history_b.json"))
+    losses_b = _losses(hist_b)
+    # resumed at the same (seed, epoch, step): the step after the last
+    # durable checkpoint, with no gap and no repeat
+    assert min(losses_b) == DIE_AT_STEP + 1
+    grow_step = out_b["step"]
+
+    # ---- phase C: the full gang again — per-rank batch scaled back DOWN
+    #      (stale announcer beats likewise left in place)
+    port_c = free_port()
+    argv_c = dict(out=run, nprocs=FLEET, world=FLEET,
+                  batch_per_rank=GLOBAL_BATCH // FLEET, port=port_c,
+                  target_world=FLEET)
+    c0 = mh_spawn(_worker_argv(phase="c", rank=0, **argv_c),
+                  devices=1, log=os.path.join(run, "c0.log"))
+    c1 = mh_spawn(_worker_argv(phase="c", rank=1, **argv_c),
+                  devices=1, log=os.path.join(run, "c1.log"))
+    assert _wait(c0, timeout=240, what="phase C rank 0") == 0
+    assert _wait(c1, timeout=240, what="phase C rank 1") == 0
+    out_c = _read_json(os.path.join(run, "outcome_c.json"))
+    assert out_c["status"] == "done"
+    hist_c = _read_json(os.path.join(run, "history_c.json"))
+    losses_c = _losses(hist_c)
+    assert min(losses_c) == grow_step + 1
+    assert max(losses_c) == total_steps
+
+    # ---- the headline: the merged interrupted-run trajectory is
+    #      BIT-IDENTICAL to the uninterrupted single-host reference
+    merged = {**losses_a, **losses_b, **losses_c}
+    assert sorted(merged) == list(range(1, total_steps + 1))
+    assert merged == ref_losses
+    # both epochs were summarised exactly once across the three phases
+    epochs = [h["epoch"] for h in hist_a + hist_b + hist_c
+              if "epoch_time_s" in h]
+    assert epochs == [0, 1]
+
+    evidence = {
+        "fleet": FLEET, "global_batch": GLOBAL_BATCH,
+        "total_steps": total_steps, "killed_at_step": DIE_AT_STEP,
+        "grow_at_step": grow_step,
+        "phases": [out_a, out_b, out_c],
+        "bit_identical_to_reference": merged == ref_losses,
+    }
+    with open(os.path.join(results_dir, "multihost_evidence.json"), "w") as f:
+        json.dump(evidence, f, indent=1)
+
+
+def test_two_process_feed_assembly_matches_single_host(tmp_path, free_port,
+                                                       mh_spawn, results_dir):
+    """Minimal data-plane check without faults: an uninterrupted 2-process
+    jax.distributed run (per-process feeds + make_array_from_process_local_
+    data) is bit-identical to the single-host lock-step simulation."""
+    ref = str(tmp_path / "ref")
+    run = str(tmp_path / "run")
+    os.makedirs(ref)
+    os.makedirs(run)
+    p = mh_spawn(_worker_argv(phase="ref", out=ref, world=FLEET,
+                              batch_per_rank=GLOBAL_BATCH // FLEET,
+                              elastic=False),
+                 devices=2, log=os.path.join(ref, "ref.log"))
+    assert _wait(p, timeout=240, what="single-host reference") == 0
+    port = free_port()
+    argv = dict(out=run, nprocs=FLEET, world=FLEET,
+                batch_per_rank=GLOBAL_BATCH // FLEET, port=port)
+    p0 = mh_spawn(_worker_argv(phase="mp", rank=0, **argv),
+                  devices=1, log=os.path.join(run, "mp0.log"))
+    p1 = mh_spawn(_worker_argv(phase="mp", rank=1, **argv),
+                  devices=1, log=os.path.join(run, "mp1.log"))
+    assert _wait(p0, timeout=240, what="2-process rank 0") == 0
+    assert _wait(p1, timeout=240, what="2-process rank 1") == 0
+    ref_losses = _losses(_read_json(os.path.join(ref, "history_ref.json")))
+    mp_losses = _losses(_read_json(os.path.join(run, "history_mp.json")))
+    assert mp_losses == ref_losses
+    with open(os.path.join(results_dir, "multihost_feed_parity.json"),
+              "w") as f:
+        json.dump({"steps": len(mp_losses),
+                   "bit_identical": mp_losses == ref_losses}, f, indent=1)
+
+
+# ====================================================================== main
+def _main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("role", choices=["worker", "announce"])
+    ap.add_argument("--phase", default="run")
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--rank", type=int, default=0)
+    ap.add_argument("--nprocs", type=int, default=1)
+    ap.add_argument("--coordinator-port", type=int, default=0)
+    ap.add_argument("--world", type=int, default=FLEET)
+    ap.add_argument("--batch-per-rank", type=int,
+                    default=GLOBAL_BATCH // FLEET)
+    ap.add_argument("--elastic", action="store_true")
+    ap.add_argument("--die-at-step", type=int, default=0)
+    ap.add_argument("--target-world", type=int, default=0)
+    ap.add_argument("--hb-timeout", type=float, default=HB_TIMEOUT)
+    ap.add_argument("--step-delay", type=float, default=STEP_DELAY)
+    args = ap.parse_args()
+    if args.role == "announce":
+        _run_announcer(args)
+    else:
+        _run_worker(args)
+
+
+if __name__ == "__main__":
+    _main()

@@ -1,15 +1,20 @@
-"""Elastic shrink-and-resume, single-host fault injection (ISSUE 2 tentpole):
+"""Elastic shrink-and-resume + grow-and-resume, single-host fault injection:
 
 heartbeat flags a worker → ``plan_remesh`` shrinks the data axis →
 the latest checkpoint restores into the new mesh → training resumes
 deterministically from the same (seed, epoch, step), with the per-worker
-batch re-scaled by ``scale_batch_or_steps``.
+batch re-scaled by ``scale_batch_or_steps``.  When the dropped worker
+heartbeats again, the inverse GROW plan re-admits it: the mesh re-expands,
+the per-worker batch scales back down against the BASE global batch, and
+the checkpoint restores into the larger topology (ISSUE 3 tentpole).
 
 The fault is injected through :class:`ElasticConfig`'s two fakes — ``clock``
 (a mutable list standing in for ``time.monotonic``) and ``step_feed`` (the
 heartbeat transport, which simply stops reporting the "dead" rank while the
-clock jumps past the timeout) — so the whole chain runs on one host with no
-real worker loss.
+clock jumps past the timeout, then reports it from OUTSIDE the shrunk world
+to announce its return) — so the whole chain runs on one host with no real
+worker loss.  The same chain over real processes and a real transport is
+exercised by ``tests/multihost.py``.
 """
 import jax
 import jax.numpy as jnp
@@ -40,29 +45,32 @@ def _loss_fn(p, x, y):
 
 
 class OneDeadWorker:
-    """step_feed fake: rank ``DEAD_RANK`` stops heartbeating at global step
+    """step_feed fake: rank ``dead_rank`` stops heartbeating at global step
     ``dead_after`` while the shared fake clock jumps past the heartbeat
     timeout, so the very next poll flags it DEAD.  After the re-mesh the
     world has shrunk and every surviving rank beats normally."""
 
-    def __init__(self, clock, dead_after: int = DEAD_AT_STEP):
+    def __init__(self, clock, dead_after: int = DEAD_AT_STEP,
+                 dead_rank: int = DEAD_RANK):
         self.clock = clock
         self.dead_after = dead_after
+        self.dead_rank = dead_rank
 
     def __call__(self, step: int, world: int) -> dict:
         self.clock[0] += 1.0
         beats = {r: (step, None) for r in range(world)}
         if world == WORLD and step >= self.dead_after:
-            del beats[DEAD_RANK]
+            del beats[self.dead_rank]
             self.clock[0] += 100.0  # fly past the 50 s timeout
         return beats
 
 
 def _elastic_pipe(ckpt_dir: str, *, epochs: int = 2,
-                  dead_after: int = DEAD_AT_STEP):
+                  dead_after: int = DEAD_AT_STEP, dead_rank: int = DEAD_RANK):
     clock = [0.0]
     elastic = ElasticConfig(heartbeat_timeout=50.0, clock=lambda: clock[0],
-                            step_feed=OneDeadWorker(clock, dead_after))
+                            step_feed=OneDeadWorker(clock, dead_after,
+                                                    dead_rank))
     return build_pipeline(
         make_traffic_series(ENTRIES, NODES), SPEC, make_host_mesh(),
         _loss_fn, _params(),
@@ -147,6 +155,188 @@ def test_elastic_requires_ckpt_dir():
         elastic=ElasticConfig(clock=lambda: clock[0]))
     with pytest.raises(ValueError, match="ckpt_dir"):
         pipe.fit(eval_fn=None)
+
+
+class DeadThenRecovered:
+    """step_feed fake for the full shrink→grow loop: ``dead_ranks`` stop
+    heartbeating at step ``dead_after`` (clock flies past the timeout, so the
+    next poll plans a shrink); from step ``recover_after`` the lost workers
+    heartbeat again from OUTSIDE the shrunk world (rank ids ≥ world — the
+    target fleet's numbering), which the engine turns into a grow plan."""
+
+    def __init__(self, clock, dead_ranks=(DEAD_RANK,),
+                 dead_after: int = DEAD_AT_STEP, recover_after: int = 6):
+        self.clock = clock
+        self.dead_ranks = tuple(dead_ranks)
+        self.dead_after = dead_after
+        self.recover_after = recover_after
+        self.killed = False
+
+    def __call__(self, step: int, world: int) -> dict:
+        self.clock[0] += 1.0
+        beats = {r: (step, None) for r in range(world)}
+        if not self.killed and world == WORLD and step >= self.dead_after:
+            for r in self.dead_ranks:
+                del beats[r]
+            self.clock[0] += 100.0  # fly past the 50 s timeout
+            self.killed = True
+        if world < WORLD and step >= self.recover_after:
+            for i in range(len(self.dead_ranks)):
+                beats[world + i] = (step, None)
+        return beats
+
+
+def _grow_pipe(ckpt_dir: str, *, dead_ranks=(DEAD_RANK,), epochs: int = 2,
+               dead_after: int = DEAD_AT_STEP, recover_after: int = 6,
+               elastic: bool = True, mesh=None):
+    clock = [0.0]
+    cfg = ElasticConfig(
+        heartbeat_timeout=50.0, clock=lambda: clock[0],
+        step_feed=DeadThenRecovered(clock, dead_ranks, dead_after,
+                                    recover_after)) if elastic else None
+    return build_pipeline(
+        make_traffic_series(ENTRIES, NODES), SPEC,
+        make_host_mesh() if mesh is None else mesh,
+        _loss_fn, _params(),
+        PipelineConfig(batch_per_rank=B, placement=Placement.REPLICATED,
+                       world=WORLD, seed=7, adam=AdamConfig(lr=1e-2),
+                       loop=TrainLoopConfig(epochs=epochs, log_every=1,
+                                            ckpt_dir=ckpt_dir)),
+        elastic=cfg)
+
+
+def test_grow_and_resume_full_chain(tmp_path):
+    """Shrink 4→3 on worker loss, then grow 3→4 when it returns: the grow
+    plan re-admits the worker, the per-worker batch inverse-scales back to
+    the original, and training resumes at the checkpoint coordinates."""
+    pipe = _grow_pipe(str(tmp_path / "ck"))
+    state, history = pipe.fit(eval_fn=None)
+
+    assert [r["kind"] for r in pipe.restarts] == ["shrink", "grow"]
+    shrink, grow = pipe.restarts
+    assert shrink["plan"].dropped_workers == (DEAD_RANK,)
+    assert shrink["world"] == WORLD - 1
+    # the grow plan re-admitted one worker (announced as rank 3 — outside
+    # the shrunk world) and the mesh axis re-expanded
+    assert grow["plan"].readmitted_workers == (WORLD - 1,)
+    assert grow["plan"].mesh_shape == (WORLD, 1)
+    assert grow["world"] == WORLD
+    # inverse batch scaling: back to the BASE per-rank batch and global batch
+    assert pipe.world == WORLD
+    assert pipe.config.batch_per_rank == B
+    assert pipe.global_batch == B * WORLD
+    assert dp_size(pipe.mesh) == min(WORLD, len(jax.devices()))
+    # monotonic step counter across BOTH re-meshes; both epochs summarised
+    steps = [h["step"] for h in history if "epoch_time_s" not in h]
+    assert steps == sorted(steps) and len(steps) == len(set(steps))
+    assert [h["epoch"] for h in history if "epoch_time_s" in h] == [0, 1]
+    from repro.distributed import latest_step
+    assert latest_step(str(tmp_path / "ck")) == max(h["step"] for h in history)
+    assert jax.tree.leaves(state)
+
+
+def test_grow_trajectory_bit_identical_when_batch_divides(tmp_path):
+    """Losing HALF the fleet and growing back preserves the global batch
+    exactly (8/2 and 8/4 both divide), so every drawn batch — and therefore
+    the whole loss trajectory — is bit-identical to an uninterrupted run.
+
+    Pinned to a 1-device mesh (logical worlds) so the compiled program is
+    the same in every phase: bit-identity across a PHYSICAL topology change
+    needs the device layout held constant, which is what tests/multihost.py
+    arranges (2 devices throughout) — on a multi-device host a shrink here
+    really re-carves the mesh and float reduction order may differ."""
+    from jax.sharding import Mesh
+    one_dev = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                   ("data", "model"))
+    smooth, smooth_hist = _grow_pipe(str(tmp_path / "a"), elastic=False,
+                                     mesh=one_dev).fit(eval_fn=None)
+    pipe = _grow_pipe(str(tmp_path / "b"), dead_ranks=(1, 2), mesh=one_dev)
+    bumpy, bumpy_hist = pipe.fit(eval_fn=None)
+
+    assert [r["kind"] for r in pipe.restarts] == ["shrink", "grow"]
+    assert pipe.restarts[0]["world"] == WORLD - 2
+    assert pipe.restarts[0]["batch_per_rank"] == 2 * B   # 8 / 2
+    assert pipe.restarts[1]["world"] == WORLD
+    assert pipe.restarts[1]["batch_per_rank"] == B       # 8 / 4 — inverse
+    for a, b in zip(jax.tree.leaves(smooth), jax.tree.leaves(bumpy)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    s_losses = {h["step"]: h["loss"] for h in smooth_hist if "loss" in h}
+    b_losses = {h["step"]: h["loss"] for h in bumpy_hist if "loss" in h}
+    assert s_losses == b_losses
+
+
+def test_meta_round_trip_across_two_remeshes(tmp_path):
+    """(epoch, done_in_epoch) must survive steps_per_epoch changing TWICE
+    (shrink 4→3 then grow 3→4, global batch 8→9→8, spe 10→9→10): positions
+    keep advancing, the interrupted epoch is summarised exactly once, and
+    the monotonic counter never lets a stale checkpoint win."""
+    ckpt = str(tmp_path / "ck")
+    pipe = _grow_pipe(ckpt, dead_after=12, recover_after=15)
+    assert pipe.steps_per_epoch == 10
+    _, history = pipe.fit(eval_fn=None)
+
+    assert [r["kind"] for r in pipe.restarts] == ["shrink", "grow"]
+    shrink, grow = pipe.restarts
+    # the shrink lands mid-epoch-1 and the checkpoint meta carries its
+    # coordinates under the OLD grid (spe 10: step 12 = epoch 1, 2 done)
+    assert (shrink["epoch"], shrink["step"]) == (1, 12)
+    # the grow lands under the SHRUNK grid (spe 9) and still resumes inside
+    # epoch 1 — the meta was written against the grid that produced it.
+    # (The returned worker announces from step 15 and is re-admitted on its
+    # 3rd announcement — the readmit_after_beats flap debounce.)
+    assert grow["epoch"] == 1 and grow["step"] == 17
+    # batch inverse-scaled from the BASE global batch (8→9→8), not from the
+    # inflated intermediate (which would compound: ceil(9/4)*4 = 12)
+    assert shrink["batch_per_rank"] == 3 and shrink["global_batch"] == 9
+    assert grow["batch_per_rank"] == B
+    assert pipe.global_batch == B * WORLD
+    steps = [h["step"] for h in history if "epoch_time_s" not in h]
+    assert steps == sorted(steps) and len(steps) == len(set(steps))
+    assert [h["epoch"] for h in history if "epoch_time_s" in h] == [0, 1]
+    from repro.distributed import checkpoint_meta, latest_step
+    assert latest_step(ckpt) == max(h["step"] for h in history)
+    # the final checkpoint reads as the start of the after-last epoch
+    assert checkpoint_meta(ckpt) == {"epoch": 2, "done_in_epoch": 0}
+
+
+@pytest.fixture(scope="module")
+def smooth_losses(tmp_path_factory):
+    """The uninterrupted reference trajectory — computed once for the whole
+    fault matrix (it does not depend on where or whom the fault hits)."""
+    pipe = _grow_pipe(str(tmp_path_factory.mktemp("smooth")), elastic=False)
+    hist = pipe.fit(eval_fn=None)[1]
+    return {h["step"]: h["loss"] for h in hist if "loss" in h}
+
+
+@pytest.mark.parametrize("dead_at", [1, 4, 9, 10])
+def test_fault_matrix_rank_agnostic_trajectories(tmp_path, dead_at,
+                                                 smooth_losses):
+    """Kill EACH rank at step boundary ``dead_at`` of a 2-epoch run: the
+    shrink→resume loss trajectory must be identical regardless of WHICH
+    rank died (the sampler depends only on (seed, epoch, world), never on
+    worker identity), and the pre-kill prefix must match the uninterrupted
+    run bit-for-bit regardless of WHEN the failure lands."""
+    smooth = smooth_losses
+    trajectories = []
+    for rank in range(WORLD):
+        pipe = _elastic_pipe(str(tmp_path / f"r{rank}"), dead_after=dead_at,
+                             dead_rank=rank)
+        _, history = pipe.fit(eval_fn=None)
+        assert len(pipe.restarts) == 1
+        # A worker that dies before its FIRST beat (dead_at=1) gets one poll
+        # of grace — the monitor times never-beaten workers from the first
+        # poll, so a slow compile can't read as death — and is flagged on
+        # the next poll instead.
+        detect = dead_at if dead_at > 1 else 2
+        assert (pipe.restarts[0]["epoch"], pipe.restarts[0]["step"]) == \
+            (detect // 10, detect)
+        losses = {h["step"]: h["loss"] for h in history if "loss" in h}
+        trajectories.append(losses)
+        # prefix before the kill is bit-identical to the uninterrupted run
+        assert all(losses[s] == smooth[s] for s in range(1, detect + 1))
+        steps = sorted(losses)
+        assert steps == list(range(1, max(steps) + 1))  # no gaps, no dups
+    assert all(t == trajectories[0] for t in trajectories[1:])
 
 
 def test_shrink_mesh_keeps_model_axis_whole():

@@ -242,6 +242,37 @@ def test_evaluate_includes_ragged_tail():
     assert got != pytest.approx(losses[0])  # the old full-batches-only value
 
 
+def test_evaluate_matches_hand_computed_ragged_tail():
+    """Window-weighted ``evaluate`` against an expectation computed with
+    NOTHING from the pipeline's compute path: numpy gathers on the
+    standardized series, a numpy loss, a numpy weighted mean.  Pins the
+    PR-2 behavior change (the tail contributes, weighted by its true window
+    count) to first principles rather than to the jitted loss itself."""
+    pipe = _pipe(Placement.REPLICATED)
+    params = _params()
+    pool = np.asarray(pipe.dataset.val_windows)
+    series = np.asarray(pipe.dataset.series)         # [T, N, F], standardized
+    starts = np.asarray(pipe.dataset.starts)
+    b = pipe.global_batch
+    assert len(pool) % b != 0 and len(pool) > b      # a genuine ragged tail
+    w = np.asarray(params["w"], np.float32)
+
+    def hand_loss(chunk):
+        s = starts[chunk]
+        x = np.stack([series[i:i + SPEC.in_len] for i in s])      # [c, L, N, F]
+        y = np.stack([series[i + SPEC.in_len:i + SPEC.in_len + SPEC.horizon]
+                      for i in s])                                # [c, H, N, F]
+        return np.mean((x[:, -1] * w - y[:, 0]) ** 2, dtype=np.float32)
+
+    chunks = [pool[i:i + b] for i in range(0, len(pool), b)]
+    expected = float(np.average([hand_loss(c) for c in chunks],
+                                weights=[len(c) for c in chunks]))
+    assert pipe.evaluate(params) == pytest.approx(expected, rel=1e-5)
+    # the tail really moves the answer: full-batches-only would be wrong
+    full_only = float(np.mean([hand_loss(c) for c in chunks if len(c) == b]))
+    assert expected != pytest.approx(full_only)
+
+
 # ------------------------------------------------------------- LM gather entry
 def test_lm_gather_entry_shift_windows():
     stream = jnp.arange(40, dtype=jnp.int32)

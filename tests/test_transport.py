@@ -1,0 +1,205 @@
+"""Heartbeat transports (``repro.distributed.transport``): the file and TCP
+transports must emit exactly the events the :class:`HeartbeatMonitor`
+consumes — and crucially, ``step_feed`` must only report ranks that beat
+SINCE THE LAST POLL, or a dead worker's stale file would keep refreshing its
+liveness and the monitor could never flag it.
+
+The integration test drives a real pipeline through a real file transport
+end-to-end: the emitter hook writes beats, ``step_feed`` reads them back,
+and a worker that stops emitting is flagged, shrunk away, and re-admitted
+when its beats resume — the same chain ``tests/multihost.py`` runs over real
+processes.
+"""
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.distributed import (FileHeartbeatTransport, TcpHeartbeatCollector,
+                               TcpHeartbeatEmitter, make_transport)
+
+
+# ------------------------------------------------------------- file transport
+def test_file_transport_reports_only_fresh_beats(tmp_path):
+    t = FileHeartbeatTransport(str(tmp_path))
+    t.emit(0, 5)
+    t.emit(1, 5, step_time=0.25)
+    assert t.step_feed(5, 2) == {0: (5, None), 1: (5, 0.25)}
+    # no new beats since the poll: nothing reported (stale ≠ alive)
+    assert t.step_feed(6, 2) == {}
+    t.emit(0, 6)
+    assert t.step_feed(6, 2) == {0: (6, None)}
+
+
+def test_file_transport_same_step_rebeat_is_fresh(tmp_path):
+    """A re-announced step (worker restarted and re-sent step 0) must still
+    count as a fresh beat — freshness is keyed on the emit seq, not step."""
+    t = FileHeartbeatTransport(str(tmp_path))
+    t.emit(0, 0)
+    assert t.step_feed(0, 1) == {0: (0, None)}
+    t.emit(0, 0)
+    assert t.step_feed(1, 1) == {0: (0, None)}
+
+
+def test_file_transport_cross_instance_and_unknown_ranks(tmp_path):
+    """Separate transport instances over one directory see each other's
+    beats (that IS the same-host multi-process design), including ranks
+    outside the poller's world — a returned worker announcing itself.
+    Only beats emitted AFTER the poller was built count."""
+    monitor = FileHeartbeatTransport(str(tmp_path))
+    worker = FileHeartbeatTransport(str(tmp_path))
+    worker.emit(0, 3)
+    worker.emit(7, 3)  # rank 7 of a 2-world poll: an outsider
+    beats = monitor.step_feed(3, 2)
+    assert beats == {0: (3, None), 7: (3, None)}
+
+
+def test_file_transport_ignores_beats_predating_the_poller(tmp_path):
+    """A RELAUNCHED trainer reuses the shared heartbeat directory: a dead
+    worker's stale file must not read as a fresh beat on the first poll —
+    else every relaunch would instantly plan a spurious grow toward a
+    worker that is still down.  Only post-construction emits report."""
+    before = FileHeartbeatTransport(str(tmp_path))
+    before.emit(1, 7)   # the dead worker's last beat, pre-relaunch
+    relaunched = FileHeartbeatTransport(str(tmp_path))
+    assert relaunched.step_feed(8, 1) == {}           # stale: not reported
+    before.emit(1, 0)   # the worker REALLY returns (fresh emit, any step)
+    assert relaunched.step_feed(9, 1) == {1: (0, None)}
+
+
+def test_file_transport_snapshot_ages(tmp_path):
+    t = FileHeartbeatTransport(str(tmp_path))
+    t.emit(0, 9)
+    snap = t.snapshot()
+    assert snap[0]["step"] == 9
+    assert 0 <= snap[0]["age"] < 5.0
+
+
+def test_file_transport_ignores_torn_writes(tmp_path):
+    t = FileHeartbeatTransport(str(tmp_path))
+    t.emit(0, 1)
+    with open(os.path.join(str(tmp_path), "hb_1.json"), "w") as f:
+        f.write('{"rank": 1, "st')  # torn mid-write
+    assert t.step_feed(1, 2) == {0: (1, None)}
+
+
+# -------------------------------------------------------------- tcp transport
+def _poll_until(fn, *, timeout=5.0):
+    deadline = time.time() + timeout
+    acc = {}
+    while time.time() < deadline:
+        acc.update(fn())
+        if acc:
+            return acc
+        time.sleep(0.01)
+    return acc
+
+
+def test_tcp_transport_round_trip():
+    coll = TcpHeartbeatCollector(port=0)
+    try:
+        em = TcpHeartbeatEmitter(coll.address)
+        em.emit(1, 4, step_time=0.5)
+        beats = _poll_until(lambda: coll.step_feed(4, 2))
+        assert beats == {1: (4, 0.5)}
+        # the collector can emit for its own local ranks without dialling
+        coll.emit(0, 4)
+        assert coll.step_feed(4, 2) == {0: (4, None)}
+        assert coll.step_feed(5, 2) == {}  # nothing fresh
+        em.close()
+    finally:
+        coll.close()
+
+
+def test_tcp_emitter_survives_dead_collector():
+    """Emit must be fire-and-forget: a vanished collector cannot take the
+    training loop down — silence is the signal, not an exception."""
+    coll = TcpHeartbeatCollector(port=0)
+    addr = coll.address
+    coll.close()
+    em = TcpHeartbeatEmitter(addr)
+    em.emit(0, 1)  # must not raise
+    em.close()
+
+
+def test_make_transport_factory(tmp_path):
+    t = make_transport(f"file:{tmp_path}")
+    assert isinstance(t, FileHeartbeatTransport)
+    coll = make_transport("tcp://127.0.0.1:0", serve=True)
+    try:
+        assert isinstance(coll, TcpHeartbeatCollector)
+        em = make_transport(coll.address and f"tcp://{coll.address}")
+        assert isinstance(em, TcpHeartbeatEmitter)
+        em.close()
+    finally:
+        coll.close()
+    with pytest.raises(ValueError, match="heartbeat transport"):
+        make_transport("carrier-pigeon:/loft")
+
+
+# --------------------------------------------- end-to-end through the engine
+def test_pipeline_shrinks_and_grows_through_file_transport(tmp_path):
+    """The full elastic loop over a REAL transport, one host: every rank's
+    beats go through hb_<rank>.json files; rank 1 stops writing at step 3
+    (flagged dead via the transport's since-last-poll contract), and from
+    step 6 beats for a rank OUTSIDE the shrunk world announce its return.
+    The run must shrink, resume, grow back, and finish both epochs."""
+    import jax
+
+    from repro.core import Placement, WindowSpec
+    from repro.data import make_traffic_series
+    from repro.optim import AdamConfig
+    from repro.pipeline import ElasticConfig, PipelineConfig, build_pipeline
+    from repro.train import TrainLoopConfig
+
+    world, b = 4, 2
+    spec = WindowSpec(horizon=2, input_len=2)
+    transport = FileHeartbeatTransport(str(tmp_path / "hb"))
+    clock = [0.0]
+    killed = [False]  # the worker dies once, not on every return to world 4
+
+    def emitter(step: int) -> None:
+        # The test's fault schedule, expressed purely as WHO EMITS: the
+        # monitor side never sees injected events, only real files.
+        clock[0] += 1.0
+        current_world = pipe.world
+        if current_world == world and step >= 3 and not killed[0]:
+            live = [r for r in range(world) if r != 1]
+            clock[0] += 100.0  # fake clock flies past the timeout
+            killed[0] = True
+        elif current_world < world:
+            live = list(range(current_world))
+            if step >= 6:
+                live.append(current_world)  # the returned worker announces
+        else:
+            live = list(range(world))
+        for r in live:
+            transport.emit(r, step)
+
+    params = {"w": np.full((3, 2), 0.1, np.float32)}
+
+    def loss_fn(p, x, y):
+        import jax.numpy as jnp
+        return jnp.mean((x[:, -1] * p["w"] - y[:, 0]) ** 2), {}
+
+    from repro.launch.mesh import make_host_mesh
+    pipe = build_pipeline(
+        make_traffic_series(120, 3), spec, make_host_mesh(),
+        loss_fn, params,
+        PipelineConfig(batch_per_rank=b, placement=Placement.REPLICATED,
+                       world=world, seed=7, adam=AdamConfig(lr=1e-2),
+                       loop=TrainLoopConfig(epochs=2, log_every=1,
+                                            ckpt_dir=str(tmp_path / "ck"))),
+        elastic=ElasticConfig(heartbeat_timeout=50.0, clock=lambda: clock[0],
+                              emitter=emitter,
+                              step_feed=transport.step_feed))
+    _, history = pipe.fit(eval_fn=None)
+    assert [r["kind"] for r in pipe.restarts] == ["shrink", "grow"]
+    assert pipe.restarts[0]["plan"].dropped_workers == (1,)
+    assert pipe.world == world and pipe.config.batch_per_rank == b
+    assert [h["epoch"] for h in history if "epoch_time_s" in h] == [0, 1]
+    # the transport's files carry the whole fleet's final state
+    snap = transport.snapshot()
+    assert set(snap) >= set(range(world - 1))
