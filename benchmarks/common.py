@@ -3,12 +3,22 @@
 Every benchmark mirrors one paper table/figure at CPU-container scale (the
 full-scale numbers come from the dry-run roofline, results/dryrun_full.json).
 Output convention: ``name,value,unit,detail`` CSV rows on stdout.
+
+``recording()`` additionally captures every row as a dict — the bench-smoke
+harness (``benchmarks/smoke.py``) runs the suites under it and serialises
+the records to ``BENCH_smoke.json`` for the CI perf trajectory.
 """
 from __future__ import annotations
 
+import contextlib
+import sys
 import time
 
 import jax
+
+#: When set (by ``recording()``), every ``row()`` call also appends a dict
+#: here — the machine-readable mirror of the CSV stream.
+RECORDS: list | None = None
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -26,3 +36,26 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 
 def row(name: str, value, unit: str, detail: str = "") -> None:
     print(f"{name},{value},{unit},{detail}")
+    if RECORDS is not None:
+        RECORDS.append({"name": name, "value": value, "unit": unit,
+                        "detail": detail})
+
+
+@contextlib.contextmanager
+def recording():
+    """Capture every ``row()`` emitted in the block as dicts (and still
+    print the CSV).  Yields the record list."""
+    global RECORDS
+    prev, RECORDS = RECORDS, []
+    try:
+        yield RECORDS
+    finally:
+        RECORDS = prev
+
+
+def peak_rss_bytes() -> int:
+    """Peak resident set size of THIS process, in bytes (ru_maxrss is KiB on
+    Linux, bytes on macOS)."""
+    import resource
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return int(rss if sys.platform == "darwin" else rss * 1024)

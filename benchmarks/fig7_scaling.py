@@ -32,24 +32,29 @@ from repro.train.loop import init_train_state
 N, ENTRIES, B_PER = 32, 600, 8
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
+    """``smoke=True``: tiny synthetic sizes + fewer worker points, for the CI
+    bench-smoke leg (seconds, not minutes; same code path)."""
+    n, entries, b_per = (8, 150, 4) if smoke else (N, ENTRIES, B_PER)
+    worlds = (1, 2) if smoke else (1, 2, 4, 8)
     spec = WindowSpec(horizon=6, input_len=6)
-    series = make_traffic_series(ENTRIES, N)
-    adj = gaussian_adjacency(random_sensor_coords(N))
+    series = make_traffic_series(entries, n)
+    adj = gaussian_adjacency(random_sensor_coords(n))
     sup = tuple(jnp.asarray(s) for s in transition_matrices(adj))
-    cfg = pgt_dcrnn.PGTDCRNNConfig(num_nodes=N, hidden=16, input_len=6, horizon=6)
+    cfg = pgt_dcrnn.PGTDCRNNConfig(num_nodes=n, hidden=16, input_len=6, horizon=6)
     params = pgt_dcrnn.init(jax.random.PRNGKey(0), cfg)
 
     def loss_fn(p, x, y):
         return pgt_dcrnn.loss_fn(p, cfg, sup, x, y), {}
 
-    window_bytes = 12 * N * 2 * 4  # one (x,y) span in f32
+    span = spec.in_len + spec.horizon
+    window_bytes = span * n * 2 * 4  # one (x,y) span in f32
     mesh = make_host_mesh()
 
-    for w in (1, 2, 4, 8):
+    for w in worlds:
         pipe = build_pipeline(
             series, spec, mesh, loss_fn, params,
-            PipelineConfig(batch_per_rank=B_PER, placement=Placement.REPLICATED,
+            PipelineConfig(batch_per_rank=b_per, placement=Placement.REPLICATED,
                            world=w, seed=0,
                            loop=TrainLoopConfig(donate=False)))
         # one worker's slice of the first global batch (lock-step semantics)
@@ -57,12 +62,21 @@ def main() -> None:
         starts0 = pipe.batch_of_starts(rank0)
         state = init_train_state(jax.tree.map(jnp.copy, params),
                                  pipe.config.adam)
-        t = timed(lambda: pipe.train_step(state, starts0)[1]["loss"])
+        t = timed(lambda: pipe.train_step(state, starts0)[1]["loss"],
+                  iters=1 if smoke else 3)
         # distributed-index: zero data bytes; DDP ships every window to its worker
-        ddp_bytes = B_PER * w * window_bytes
+        ddp_bytes = b_per * w * window_bytes
+        glob = b_per * w
         row(f"fig7/steps_per_epoch_w{w}", pipe.steps_per_epoch, "steps", "")
         row(f"fig7/index_step_w{w}", f"{1e3 * t:.2f}", "ms",
             "per-worker fused step; data comms = 0 B")
+        # throughput with perfect lock-step overlap of the w workers — the
+        # same upper-bound semantics as the speedup view above; "tokens" are
+        # window ELEMENTS (batch x span x nodes x features) through the step
+        row(f"fig7/windows_per_s_w{w}", f"{glob / t:.1f}", "windows/s",
+            "global batch / per-worker step, simulated w-worker overlap")
+        row(f"fig7/tokens_per_s_w{w}", f"{glob * span * n * 2 / t:.0f}",
+            "tok/s", "window elements through the fused gather/step")
         row(f"fig7/ddp_data_bytes_w{w}", ddp_bytes, "B",
             "on-demand batch shipping per step")
 

@@ -1,12 +1,17 @@
 """Benchmark harness: one module per paper table/figure.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--only fig7,table3]
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig7,table3] [--smoke]
 Emits ``name,value,unit,detail`` CSV rows; §Dry-run/§Roofline numbers come
 from results/dryrun_full.json (produced by repro.launch.dryrun --all).
+
+``--smoke`` shrinks the suites that support it (fig7, table3) to tiny
+synthetic sizes — the CI bench-smoke leg runs them through
+``benchmarks/smoke.py``, which also serialises the rows to BENCH_smoke.json.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -32,6 +37,8 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(SUITES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny synthetic sizes on suites that support it")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
     failed = []
@@ -39,8 +46,11 @@ def main() -> None:
     for name in names:
         t0 = time.perf_counter()
         print(f"# --- {name} ---")
+        fn = SUITES[name]
+        kw = ({"smoke": True} if args.smoke
+              and "smoke" in inspect.signature(fn).parameters else {})
         try:
-            SUITES[name]()
+            fn(**kw)
         except Exception:  # noqa: BLE001 — keep the harness going
             failed.append(name)
             traceback.print_exc()

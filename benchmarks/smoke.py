@@ -1,0 +1,115 @@
+"""CI bench-smoke harness — the perf trajectory's recorded points.
+
+Runs the fig7 (distributed-index scaling) and table3 (index vs standard
+batching) benchmarks in ``--smoke`` mode (tiny synthetic data, same code
+paths) plus a window-gather microbench (dense jnp vs Pallas interpret), and
+serialises everything to ``BENCH_smoke.json``:
+
+- ``headline``: the few numbers a trend line wants — tokens/s through the
+  fused gather/step, gather microseconds for the ``dense`` and
+  ``pallas``-interpret lowerings, peak RSS of the whole run;
+- ``rows``: every ``name,value,unit,detail`` record the suites printed, so
+  nothing the CSV stream shows is lost from the artifact.
+
+CPU wall times are NOT accelerator performance (Pallas runs interpret mode
+on CPU) — the point of this harness is (a) the benchmarks EXECUTE, end to
+end, on every push, and (b) successive artifacts give the hot paths a
+recorded history, so a regression in the gather/step machinery shows up as
+a trend break instead of going unnoticed (MSPipe's untracked-stage lesson).
+
+Usage: PYTHONPATH=src python -m benchmarks.smoke [--out results/BENCH_smoke.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import fig7_scaling, table3_index_vs_base
+from benchmarks.common import peak_rss_bytes, recording, row, timed
+from repro.kernels import window_gather, window_gather_ref
+
+
+def _gather_microbench() -> None:
+    """Window gather at a reduced PeMS-like shape: the hot path of
+    index-batching, timed for the dense lowering and checked+timed for the
+    Pallas kernel in interpret mode."""
+    rng = np.random.default_rng(0)
+    series = jnp.asarray(rng.standard_normal((512, 64)).astype(np.float32))
+    starts = jnp.asarray(rng.integers(0, 480, 16).astype(np.int32))
+    t_dense = timed(lambda: window_gather_ref(series, starts, span=24))
+    row("smoke/gather_dense_us", f"{1e6 * t_dense:.0f}", "us",
+        "[512,64] b=16 span=24, jnp dense lowering")
+    t_pallas = timed(
+        lambda: window_gather(series, starts, span=24, use_pallas=True),
+        iters=1)
+    row("smoke/gather_pallas_interpret_us", f"{1e6 * t_pallas:.0f}", "us",
+        "same shape, Pallas kernel in interpret mode (CPU; not TPU perf)")
+    ok = np.array_equal(
+        np.asarray(window_gather(series, starts, span=24, use_pallas=True)),
+        np.asarray(window_gather_ref(series, starts, span=24)))
+    row("smoke/gather_pallas_matches_dense", int(ok), "bool", "")
+    if not ok:
+        raise SystemExit("pallas gather diverged from the dense lowering")
+
+
+def _pick(records: list[dict], name: str) -> float:
+    vals = [float(r["value"]) for r in records if r["name"] == name]
+    if not vals:
+        raise SystemExit(f"bench-smoke produced no '{name}' record")
+    return vals[0]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="results/BENCH_smoke.json")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    print("name,value,unit,detail")
+    with recording() as records:
+        fig7_scaling.main(smoke=True)
+        table3_index_vs_base.main(smoke=True)
+        _gather_microbench()
+    wall = time.perf_counter() - t0
+
+    tokens = max(float(r["value"]) for r in records
+                 if r["name"].startswith("fig7/tokens_per_s_"))
+    payload = {
+        "schema": 1,
+        "kind": "bench-smoke",
+        "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
+        "wall_s": round(wall, 2),
+        "headline": {
+            "tokens_per_s": tokens,
+            "gather_dense_us": _pick(records, "smoke/gather_dense_us"),
+            "gather_pallas_interpret_us": _pick(
+                records, "smoke/gather_pallas_interpret_us"),
+            "step_overhead_vs_base_pct": round(
+                100 * (_pick(records, "table3/step_index")
+                       / _pick(records, "table3/step_base") - 1), 1),
+            "peak_rss_bytes": peak_rss_bytes(),
+        },
+        "rows": records,
+    }
+    out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(prefix=".bench-", dir=out_dir)
+    with os.fdopen(fd, "w") as f:
+        json.dump(payload, f, indent=1)
+    os.replace(tmp, args.out)
+    print(f"# bench-smoke done in {wall:.1f}s -> {args.out}")
+    print(json.dumps(payload["headline"], indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -24,13 +24,17 @@ from repro.train.loop import init_train_state, make_train_step
 N, ENTRIES, B = 32, 600, 16
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
+    """``smoke=True``: tiny synthetic sizes + 1 parity epoch, for the CI
+    bench-smoke leg (same code path, seconds of wall time)."""
+    n, entries, b = (8, 150, 8) if smoke else (N, ENTRIES, B)
+    epochs = 1 if smoke else 3
     spec = WindowSpec(horizon=6, input_len=6)
-    raw = make_traffic_series(ENTRIES, N)
+    raw = make_traffic_series(entries, n)
     ds = IndexDataset.from_raw(raw, spec)
-    adj = gaussian_adjacency(random_sensor_coords(N))
+    adj = gaussian_adjacency(random_sensor_coords(n))
     sup = tuple(jnp.asarray(s) for s in transition_matrices(adj))
-    cfg = pgt_dcrnn.PGTDCRNNConfig(num_nodes=N, hidden=16, input_len=6, horizon=6)
+    cfg = pgt_dcrnn.PGTDCRNNConfig(num_nodes=n, hidden=16, input_len=6, horizon=6)
     params = pgt_dcrnn.init(jax.random.PRNGKey(0), cfg)
     adam = AdamConfig(lr=5e-3)
 
@@ -51,14 +55,14 @@ def main() -> None:
                             input_len=6, horizon=6)
         return pgt_dcrnn.loss_fn(p, cfg, sup, x, y), {}
 
-    sampler = GlobalShuffleSampler(ds.train_windows, B, ShardInfo(0, 1), seed=1)
+    sampler = GlobalShuffleSampler(ds.train_windows, b, ShardInfo(0, 1), seed=1)
     step_b = make_train_step(loss_base, adam, lambda s: 5e-3, donate=False)
     step_i = make_train_step(loss_index, adam, lambda s: 5e-3, donate=False)
 
     sb = init_train_state(params, adam)
     si = init_train_state(params, adam)
     losses_b, losses_i = [], []
-    for epoch in range(3):
+    for epoch in range(epochs):
         for ids in sampler.epoch_global(epoch):
             ids = jnp.asarray(ids)
             sb, mb = step_b(sb, ids)

@@ -9,13 +9,15 @@ from repro.core.batching import (
 )
 from repro.core.distributed import Placement, batch_sharding, series_sharding
 from repro.core.index_dataset import IndexDataset
-from repro.core.sampler import GlobalShuffleSampler, LocalBatchShuffleSampler, ShardInfo
+from repro.core.sampler import (EvalFeeds, GlobalShuffleSampler,
+                                LocalBatchShuffleSampler, ShardInfo)
 from repro.core.windows import WindowSpec, index_batching_bytes, materialized_bytes, num_windows
 
 __all__ = [
     "IndexDataset",
     "WindowSpec",
     "Placement",
+    "EvalFeeds",
     "GlobalShuffleSampler",
     "LocalBatchShuffleSampler",
     "ShardInfo",

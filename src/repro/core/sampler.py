@@ -19,6 +19,11 @@ the per-process index feed a real multi-host launch hands to rank ``rank``.
 single-host assembly of the per-rank feed columns (rank-major), kept for the
 lock-step SPMD simulation — ``concat([feed(r, e) for r in ranks], axis=1) ==
 epoch_global(e)`` is the contract the pipeline tests pin down.
+
+Evaluation mirrors the same contract through :class:`EvalFeeds`
+(``eval_feed(rank, pool)``): val/test pools are carved into the same
+rank-major column blocks, deterministically and without shuffling, so a
+multi-process fleet scores each eval window exactly once.
 """
 from __future__ import annotations
 
@@ -41,7 +46,54 @@ def _rng(seed: int, epoch: int) -> np.random.Generator:
     return np.random.default_rng(np.random.SeedSequence([seed, epoch]))
 
 
-class GlobalShuffleSampler:
+class EvalFeeds:
+    """Deterministic per-rank EVAL feeds — the evaluation mirror of the
+    ``feed(rank, epoch)`` contract.
+
+    Eval pools (val/test window ids) are scored in POOL ORDER: no shuffling,
+    no epoch argument, so every rank derives the identical plan from the pool
+    alone — zero communication, exactly like the train feeds.  The pool's
+    full global chunks ``[steps, world*batch]`` are carved rank-major like
+    the train grid: ``eval_feed(rank, pool)`` is column block ``rank``, and
+    ``concat([eval_feed(r, pool) for r in ranks], axis=1).ravel()`` followed
+    by ``eval_tail(pool)`` reproduces the pool exactly once (nothing dropped,
+    nothing double-counted — the invariant test_feeds_property pins).
+
+    The ragged tail (``len(pool) % (world*batch)`` windows) stays GLOBAL:
+    every rank sees all of it and scores it as one small replicated batch.
+    Splitting it per-rank instead would change the float reduction grouping
+    and break bit-identity with the single-host window-weighted reference.
+    """
+
+    def _eval_world(self) -> int:
+        shard = getattr(self, "shard", None)
+        return shard.world if shard is not None else self.world
+
+    def eval_feed(self, rank: int, pool: np.ndarray) -> np.ndarray:
+        """[steps, batch_per_rank] eval window ids for ``rank``: its column
+        block of the pool's full global chunks, in pool order."""
+        pool = np.asarray(pool)
+        world, b = self._eval_world(), self.batch
+        steps = len(pool) // (world * b)
+        return pool[:steps * world * b].reshape(steps, world, b)[:, rank, :]
+
+    def eval_tail(self, pool: np.ndarray) -> np.ndarray:
+        """The ragged remainder after the full chunks — global, identical on
+        every rank (scored once as a replicated small batch)."""
+        pool = np.asarray(pool)
+        world, b = self._eval_world(), self.batch
+        return pool[(len(pool) // (world * b)) * world * b:]
+
+    def eval_global(self, pool: np.ndarray) -> np.ndarray:
+        """[steps, world*batch] single-host assembly of the eval feed columns
+        — exactly the pool's full chunks, in order."""
+        pool = np.asarray(pool)
+        world, b = self._eval_world(), self.batch
+        steps = len(pool) // (world * b)
+        return pool[:steps * world * b].reshape(steps, world * b)
+
+
+class GlobalShuffleSampler(EvalFeeds):
     """Paper default: communication-free global shuffle across all windows."""
 
     def __init__(self, window_ids: np.ndarray, batch_per_rank: int, shard: ShardInfo, *, seed: int = 0,
@@ -80,7 +132,7 @@ class GlobalShuffleSampler:
         return perm[:n].reshape(self.steps_per_epoch, self.shard.world * self.batch)
 
 
-class LocalBatchShuffleSampler:
+class LocalBatchShuffleSampler(EvalFeeds):
     """Generalized variant: fixed per-rank partition, shuffled batch order."""
 
     def __init__(self, window_ids: np.ndarray, batch_per_rank: int, shard: ShardInfo, *, seed: int = 0):

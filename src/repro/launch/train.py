@@ -13,7 +13,10 @@ use the pipeline's `lm` gather (token-stream windows, y = shift(x)).
 Multi-host: call with `--init-distributed` under a jax.distributed-capable
 launcher (env-configured coordinator) and each process trains from its own
 per-rank index feed (`DataPlane.feed(jax.process_index(), epoch)`) — no host
-ever materialises the global index grid.  `--elastic` attaches the
+ever materialises the global index grid.  Epoch-end evaluation rides the
+same plane: each process scores only its own rank-block of the val pool
+(`DataPlane.eval_feed`), `--eval-every` sets the cadence, and the eval rows
+land in the crash-durable `--history-out` sink.  `--elastic` attaches the
 heartbeat/re-mesh policy so worker loss shrinks the data axis and resumes
 from the latest checkpoint instead of killing the run; when the worker
 returns, the inverse GROW plan re-admits it with the per-worker batch scaled
@@ -60,7 +63,8 @@ from repro.models import dcrnn, pgt_dcrnn
 from repro.models.lm import model as lm
 from repro.optim import AdamConfig, warmup_cosine
 from repro.pipeline import ElasticConfig, PipelineConfig, build_pipeline
-from repro.train.loop import RestartSignal, TrainLoopConfig
+from repro.train.loop import (JsonlHistorySink, RestartSignal,
+                              TrainLoopConfig)
 
 
 def _train_stgnn(arch, args, adam, sched, loop: TrainLoopConfig,
@@ -247,6 +251,13 @@ def main() -> None:
                     help="LM sampler (ST-GNN samplers follow --placement)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--eval-every", type=int, default=1,
+                    help="epoch-end eval cadence: score the val split through "
+                         "the distributed eval feeds after every N-th epoch "
+                         "(0 disables eval).  Works under --init-distributed: "
+                         "each process scores only its own rank-block of the "
+                         "eval pool and the window-weighted metric is "
+                         "bit-identical to the single-host value")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--no-halo", action="store_true",
                     help="PARTITIONED: keep windows strictly interior to each "
@@ -282,7 +293,14 @@ def main() -> None:
                     help="call jax.distributed.initialize() (env-configured "
                          "coordinator); each process then trains from its "
                          "own per-rank feed via jax.process_index()")
-    ap.add_argument("--history-out", default=None)
+    ap.add_argument("--history-out", default=None,
+                    help="crash-durable history: every logged row (train "
+                         "steps AND epoch-end eval rows) is appended to this "
+                         "file as one JSON object per line and fsynced as it "
+                         "lands, so a crash or exit-75 relaunch loses "
+                         "nothing; duplicate (epoch, step) rows from a "
+                         "relaunch re-running an epoch tail are suppressed "
+                         "(idempotent resume).  Process 0 writes it")
     args = ap.parse_args()
     if args.heartbeat and not args.elastic:
         # Silently ignoring the transport would leave the operator believing
@@ -318,13 +336,18 @@ def main() -> None:
     sched = lambda s: warmup_cosine(s, base_lr=args.lr, warmup_steps=total // 10,
                                     total_steps=total)
     loop = TrainLoopConfig(epochs=args.epochs, log_every=10,
-                           ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+                           ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+                           eval_every=args.eval_every)
 
     t0 = time.perf_counter()
-    # The sink mirrors every logged row as it lands, so the rows survive the
+    # The sink mirrors every logged row AS IT LANDS, so the rows survive the
     # crash paths too — a peer death surfaces as a plain collective error,
-    # not a RestartSignal, and --history-out must still capture the run.
-    sink: list = []
+    # not a RestartSignal.  With --history-out the sink is crash-durable
+    # (JSONL, fsynced per row) and idempotent across exit-75 relaunches, so
+    # there is nothing to dump on any exit path: the file is always current.
+    sink: list | JsonlHistorySink = \
+        (JsonlHistorySink(args.history_out)
+         if args.history_out and jax.process_index() == 0 else [])
     try:
         if arch.family == "stgnn":
             state, history = _train_stgnn(arch, args, adam, sched, loop, sink)
@@ -334,15 +357,7 @@ def main() -> None:
         # relaunch-mode elastic: the state is already checkpointed with its
         # (epoch, done_in_epoch) coordinates; hand the plan to the launcher.
         _write_plan(args, sig)
-        if args.history_out:
-            with open(args.history_out, "w") as f:
-                json.dump(sig.history, f, indent=1)
         raise SystemExit(EX_REMESH)
-    except BaseException:
-        if args.history_out and sink:
-            with open(args.history_out, "w") as f:
-                json.dump(sink, f, indent=1)
-        raise
     wall = time.perf_counter() - t0
     final = [h for h in history if "loss" in h]
     if final:
@@ -351,9 +366,8 @@ def main() -> None:
     else:
         print(f"done: nothing to train (resumed past requested epochs), "
               f"wall {wall:.1f}s")
-    if args.history_out:
-        with open(args.history_out, "w") as f:
-            json.dump(history, f, indent=1)
+    if isinstance(sink, JsonlHistorySink):
+        sink.close()
 
 
 if __name__ == "__main__":

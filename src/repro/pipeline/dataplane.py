@@ -35,7 +35,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core.distributed import (Placement, batch_sharding, dp_size,
                                     series_sharding)
@@ -184,27 +184,73 @@ class DataPlane:
             return self.epoch_global(epoch)
         return np.concatenate([self.feed(r, epoch) for r in ranks], axis=1)
 
+    # ------------------------------------------------------------ eval feeds
+    def eval_pool(self, split: str = "val") -> np.ndarray:
+        """The split's global window-id pool (``val_windows``/``test_windows``)."""
+        return np.asarray(getattr(self.dataset, f"{split}_windows"))
+
+    def eval_feed(self, rank: int, split: str = "val") -> np.ndarray:
+        """[steps, batch_per_rank] eval window ids for ``rank`` — the eval
+        mirror of :meth:`feed`: rank ``rank``'s column block of the split
+        pool's full global chunks, in pool order (no shuffle, no epoch)."""
+        return self.sampler.eval_feed(rank, self.eval_pool(split))
+
+    def eval_tail(self, split: str = "val") -> np.ndarray:
+        """The split's ragged remainder — global, identical on every rank."""
+        return self.sampler.eval_tail(self.eval_pool(split))
+
+    def eval_grid(self, split: str = "val") -> tuple[np.ndarray, np.ndarray]:
+        """``(rows, tail)`` — what THIS process iterates when evaluating.
+
+        ``rows`` is the full-chunk grid: global ``[steps, world*batch]`` in
+        single-process mode, the concatenation of this process's own
+        ``eval_feed`` columns under multi-process SPMD (each process
+        materialises only its rank-block of every chunk).  ``tail`` is the
+        global ragged remainder, scored once as a replicated small batch.
+        """
+        pool = self.eval_pool(split)
+        tail = self.sampler.eval_tail(pool)
+        ranks = self.process_ranks
+        if ranks is None:
+            return self.sampler.eval_global(pool), tail
+        return np.concatenate(
+            [self.sampler.eval_feed(r, pool) for r in ranks], axis=1), tail
+
     # --------------------------------------------------------- data plumbing
-    def batch_of_starts(self, window_ids: np.ndarray) -> jnp.ndarray:
+    def batch_of_starts(self, window_ids: np.ndarray, *,
+                        replicate: bool = False) -> jnp.ndarray:
         """Window ids (one epoch grid row) -> device array of start steps.
 
         Multi-process runs hand per-process rows (this rank's feed columns)
         and assemble the global sharded array from process-local data; the
         single-process path device_puts the already-global row.
+
+        ``replicate=True`` is the ragged-eval-tail path: ``window_ids`` is a
+        GLOBAL row every process derived identically, and the batch stays
+        replicated in both single- and multi-process runs — same program,
+        same reduction grouping, bit-identical tail metrics.
         """
         starts_np = np.asarray(self.dataset.starts[np.asarray(window_ids)])
+        if replicate:
+            if jax.process_count() > 1:
+                shd = NamedSharding(self.mesh, PartitionSpec())
+                return jax.make_array_from_callback(
+                    starts_np.shape, shd, lambda idx: starts_np[idx])
+            return jnp.asarray(starts_np)
         ranks = self.process_ranks
         if ranks is not None and self.batch_sharding is not None:
             local_width = len(ranks) * self.config.batch_per_rank
             if starts_np.shape[0] != local_width:
                 # Only per-process feed rows have process-local semantics;
-                # treating a GLOBAL row (e.g. an eval pool chunk) as local
-                # data would assemble a duplicated wrong-shaped batch.
+                # treating a GLOBAL row as local data would assemble a
+                # duplicated wrong-shaped batch.  Eval chunks ride the
+                # eval_grid feed columns; the ragged tail passes
+                # replicate=True.
                 raise NotImplementedError(
                     f"under jax.distributed, batch_of_starts expects this "
                     f"process's feed row of width {local_width}, got "
-                    f"{starts_np.shape[0]}; global-width rows (evaluate) "
-                    f"are single-host only for now")
+                    f"{starts_np.shape[0]}; hand global rows through "
+                    f"replicate=True instead")
             return jax.make_array_from_process_local_data(
                 self.batch_sharding, starts_np)
         starts = jnp.asarray(starts_np)

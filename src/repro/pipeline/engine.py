@@ -49,8 +49,8 @@ from repro.launch.mesh import shrink_mesh
 from repro.pipeline.dataplane import DataPlane, PipelineConfig, build_dataplane
 from repro.pipeline.gathers import resolve_gather
 from repro.pipeline.samplers import ShardAlignedBatchSampler
-from repro.train.loop import (RestartSignal, init_train_state, make_train_step,
-                              run_training)
+from repro.train.loop import (RestartSignal, combine_weighted,
+                              init_train_state, make_train_step, run_training)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,8 +178,9 @@ class Engine:
     def describe(self) -> dict:
         return self.dataplane.describe()
 
-    def batch_of_starts(self, window_ids: np.ndarray) -> jnp.ndarray:
-        return self.dataplane.batch_of_starts(window_ids)
+    def batch_of_starts(self, window_ids: np.ndarray, *,
+                        replicate: bool = False) -> jnp.ndarray:
+        return self.dataplane.batch_of_starts(window_ids, replicate=replicate)
 
     # --------------------------------------------------------------- training
     def fit(
@@ -239,14 +240,32 @@ class Engine:
             else:
                 start_epoch = start_step // self.steps_per_epoch
         if eval_fn == "auto":
-            # Multi-process eval is not wired yet: evaluate() hands GLOBAL
-            # window pools to batch_of_starts, which only understands
-            # per-process feed rows under jax.distributed (see ROADMAP).
-            has_val = (len(self.dataset.val_windows) > 0
-                       and self.dataplane.process_ranks is None)
+            # Works single- AND multi-process: evaluate() rides the per-rank
+            # eval feeds, and every process derives the identical chunk plan
+            # from the pool alone, so the epoch-end eval collectives stay in
+            # lock step across the fleet.
             eval_fn = (lambda st: {"val_mae": self.evaluate(st["params"])}) \
-                if has_val else None
+                if len(self.dataset.val_windows) > 0 else None
+        if eval_fn is not None and self.elastic is not None \
+                and self.elastic.emitter is not None:
+            # Epoch-end eval is a coordinated pause of the lockstep program:
+            # nobody steps, so nobody heartbeats, and an eval (or its first
+            # compile) longer than heartbeat_timeout would make the first
+            # post-eval poll read the whole HEALTHY fleet as stale and plan a
+            # bogus shrink.  Re-announce liveness the moment eval returns —
+            # every process runs eval_fn, so every rank re-beats before the
+            # decider's next poll.
+            inner_eval = eval_fn
+
+            def eval_fn(st):
+                out = inner_eval(st)
+                try:
+                    self.elastic.emitter(self._hb_step)
+                except OSError:
+                    pass  # fire-and-forget, like the per-step emit
+                return out
         history: list[dict] = []
+        self._hb_step = start_step  # last health-polled step (eval re-beats)
         monitor = self._make_monitor()
         restarts_this_fit = 0
         while True:
@@ -297,24 +316,35 @@ class Engine:
 
     # ------------------------------------------------------------- evaluation
     def evaluate(self, params, *, split: str = "val", max_batches: int = 4) -> float:
-        """Window-weighted mean loss over up to ``max_batches`` global batches.
+        """Window-weighted mean loss over up to ``max_batches`` eval chunks.
 
-        The final partial batch of a split is evaluated too (as a smaller
-        batch — one extra compile for its shape) and the mean is weighted by
-        window count, so small splits are not silently truncated.
+        Rides the distributed eval feeds (``DataPlane.eval_grid``): full
+        chunks are the pool's global batches, assembled from each process's
+        own ``eval_feed`` rank-block columns under ``jax.distributed`` (no
+        process ever materialises — or gathers windows for — more than its
+        own shard of a chunk), and the ragged tail is scored once as a small
+        replicated batch (one extra compile for its shape) so small splits
+        are never silently truncated.  Per-chunk ``(loss, windows)`` pairs
+        combine through :func:`repro.train.loop.combine_weighted`, making
+        the multi-process result bit-identical to the single-host
+        window-weighted reference.
         """
-        pool = getattr(self.dataset, f"{split}_windows")
+        dp = self.dataplane
+        pool = dp.eval_pool(split)
         if len(pool) == 0:
             return float("nan")
-        b = min(self.global_batch, len(pool))
-        limit = min(len(pool), max_batches * b)
-        losses, weights = [], []
-        for i in range(0, limit, b):
-            chunk = pool[i:i + b]
-            loss, _ = self._eval_loss(params, self.batch_of_starts(chunk))
-            losses.append(float(loss))
-            weights.append(len(chunk))
-        return float(np.average(losses, weights=weights))
+        rows, tail = dp.eval_grid(split)
+        pairs = []
+        for i in range(min(rows.shape[0], max_batches)):
+            loss, _ = self._eval_loss(params, dp.batch_of_starts(rows[i]))
+            pairs.append((float(loss), self.global_batch))
+        # The tail only contributes when the budget was not already spent on
+        # full chunks — the same coverage the pre-distributed evaluate gave.
+        if len(tail) and rows.shape[0] < max_batches:
+            loss, _ = self._eval_loss(
+                params, dp.batch_of_starts(tail, replicate=True))
+            pairs.append((float(loss), len(tail)))
+        return combine_weighted(pairs)
 
     # ---------------------------------------------------------------- elastic
     def _make_monitor(self) -> HeartbeatMonitor | None:
@@ -335,6 +365,7 @@ class Engine:
         announced: set[int] = set()     # out-of-world beats since last poll
 
         def cb(global_step: int) -> None:
+            self._hb_step = global_step
             if el.emitter is not None:
                 try:
                     el.emitter(global_step)  # this process's ranks beat out

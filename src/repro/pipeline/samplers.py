@@ -24,11 +24,11 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.distributed import local_window_ids
-from repro.core.sampler import _rng
+from repro.core.sampler import EvalFeeds, _rng
 from repro.core.windows import WindowSpec
 
 
-class ShardAlignedBatchSampler:
+class ShardAlignedBatchSampler(EvalFeeds):
     """Per-rank fixed partitions aligned to ``local_time_range`` boundaries."""
 
     def __init__(

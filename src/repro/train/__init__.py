@@ -1,4 +1,6 @@
-from repro.train.loop import TrainLoopConfig, make_train_step, run_training
+from repro.train.loop import (JsonlHistorySink, TrainLoopConfig,
+                              combine_weighted, make_train_step, run_training)
 from repro.train.serve import ServeConfig, Server
 
-__all__ = ["make_train_step", "run_training", "TrainLoopConfig", "Server", "ServeConfig"]
+__all__ = ["make_train_step", "run_training", "TrainLoopConfig",
+           "combine_weighted", "JsonlHistorySink", "Server", "ServeConfig"]

@@ -18,6 +18,8 @@ the distributed-optimization knobs the 1000-node posture calls for.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from functools import partial
 from typing import Any, Callable
@@ -55,6 +57,119 @@ class TrainLoopConfig:
     microbatches: int = 1
     grad_dtype: str | None = None  # "bfloat16" compresses grads pre-all-reduce
     donate: bool = True
+    # Epoch-end eval cadence: run eval_fn after every N-th epoch (1 = every
+    # epoch, the historical behavior; 0 = never, even with an eval_fn).
+    # Epoch-indexed, not call-counted, so a relaunch-resume keeps the cadence.
+    eval_every: int = 1
+
+
+def combine_weighted(pairs) -> float:
+    """Reduce ``(metric, weight)`` pairs to their weighted mean.
+
+    This is the psum-style combine the evaluation paths share: each full
+    eval chunk contributes ``(chunk_loss, chunk_windows)`` and the ragged
+    tail ``(tail_loss, tail_windows)``.  Accumulated in float64 in pair
+    order, so the single-host reference and the distributed per-rank-feed
+    path perform the exact same arithmetic — bit-identical results.
+    """
+    weighted_sum = np.float64(0.0)
+    weight = np.float64(0.0)
+    for value, w in pairs:
+        weighted_sum += np.float64(value) * np.float64(w)
+        weight += np.float64(w)
+    return float(weighted_sum / weight) if weight else float("nan")
+
+
+class JsonlHistorySink:
+    """Crash-durable, resume-idempotent history sink (one JSON row per line).
+
+    Drop-in for the plain-list ``history_sink``: every logged row is appended
+    to ``path`` and flushed+fsynced as it lands, so rows survive hard crashes
+    (a peer death surfaces as a collective error, not a clean return).  On
+    construction it reloads the rows already durable from a previous
+    incarnation and silently drops re-logged duplicates — an exit-75
+    relaunch that restores a mid-epoch checkpoint re-RUNS the tail of the
+    epoch (training needs the steps), but its step rows and the epoch
+    summary (including eval metrics) carry the same ``(epoch, step)``
+    coordinates and must not appear twice in the durable history.
+
+    ``rows`` holds only the rows ACCEPTED this incarnation (what this
+    process actually contributed); ``load()`` returns the full durable
+    history across all incarnations.
+
+    Dedup is FIRST-WINS on coordinates, which leans on the repo's
+    deterministic-resume contract: a resume that re-runs (epoch, step)
+    recomputes the identical row (samplers are pure in (seed, epoch) and
+    the global batch is preserved across relaunches), so keeping the
+    already-durable copy is exact.  A re-mesh that CHANGES the global batch
+    (``keep_global_batch`` ceil on a non-dividing world) breaks that
+    premise — re-run coordinates then carry different losses and the sink
+    keeps the pre-crash values; the returned ``fit`` history is the
+    authoritative trajectory in that case.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self.rows: list[dict] = []
+        self._seen: set = set()
+        rows, durable_end = self._scan(path)
+        for row in rows:
+            self._seen.add(self._key(row))
+        if durable_end is not None:
+            # Drop the torn tail a crash mid-write left behind: it was never
+            # durable (the row will be re-logged on resume), and appending
+            # after a partial line would corrupt the NEXT row too.
+            with open(path, "r+") as f:
+                f.truncate(durable_end)
+        self._f = open(path, "a")
+
+    @staticmethod
+    def _key(row: dict) -> tuple:
+        kind = "summary" if "epoch_time_s" in row else "step"
+        return (kind, row.get("epoch"), row.get("step"))
+
+    @staticmethod
+    def _scan(path: str) -> tuple[list[dict], int | None]:
+        """(durable rows, truncation offset): a row is durable only when its
+        line parses AND is newline-terminated; the offset points past the
+        last such line when anything torn follows, else None."""
+        if not os.path.exists(path):
+            return [], None
+        with open(path, "rb") as f:
+            data = f.read()
+        rows, offset, pos = [], 0, 0
+        for line in data.splitlines(keepends=True):
+            pos += len(line)
+            if not line.endswith(b"\n"):
+                break
+            text = line.decode("utf-8", "replace").strip()
+            if not text:
+                offset = pos
+                continue
+            try:
+                rows.append(json.loads(text))
+            except ValueError:
+                break
+            offset = pos
+        return rows, (offset if offset < len(data) else None)
+
+    def append(self, row: dict) -> bool:
+        key = self._key(row)
+        if key in self._seen:
+            return False
+        self._seen.add(key)
+        self.rows.append(row)
+        self._f.write(json.dumps(row) + "\n")
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        return True
+
+    def load(self) -> list[dict]:
+        """All durable rows, across every incarnation, in logged order."""
+        return self._scan(self.path)[0]
+
+    def close(self) -> None:
+        self._f.close()
 
 
 def zero_grads_like(params, grad_dtype: str | None):
@@ -178,7 +293,9 @@ def run_training(
     as it is logged.  Unlike the returned history it survives NON-elastic
     failures (a collective erroring out when a peer process dies raises
     straight through), so an external launcher can still persist the rows
-    logged before the crash.
+    logged before the crash.  Pass a :class:`JsonlHistorySink` to make the
+    rows crash-durable AND idempotent across relaunch-resumes (duplicate
+    ``(epoch, step)`` rows from a re-run epoch tail are suppressed).
     """
     history: list[dict] = []
     global_step = start_step
@@ -246,7 +363,8 @@ def run_training(
         epoch_metrics = {"epoch": epoch, "epoch_time_s": time.perf_counter() - t0,
                          "step": global_step,
                          "loss": float(metrics["loss"])}
-        if eval_fn is not None:
+        if eval_fn is not None and loop.eval_every \
+                and (epoch + 1) % loop.eval_every == 0:
             epoch_metrics.update(eval_fn(state))
         log_row(epoch_metrics)
         # The final step's health poll runs AFTER the epoch summary: a

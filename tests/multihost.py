@@ -23,7 +23,15 @@ simulation:
   outside the shrunk world); the running trainer plans the GROW re-mesh and
   exits for relaunch;
 - the driver relaunches the full 2-process gang (per-rank batch scaled back
-  down) which finishes the run.
+  down) which finishes the run;
+- epoch-end EVAL rides the same distributed data plane (ISSUE 4 tentpole):
+  each process scores only its own rank-block of the val pool
+  (``DataPlane.eval_feed``), the ragged tail is scored once replicated, and
+  the window-weighted ``val_mae`` rows must come out bit-identical to the
+  single-host reference — in every phase, across the kill→shrink→grow cycle;
+- every phase appends to ONE crash-durable ``history.jsonl`` sink
+  (``JsonlHistorySink``): after all three relaunches each step row and each
+  epoch/eval row appears exactly once (idempotent resume).
 
 The device-level topology is held constant across phases (2 devices total:
 2 procs × 1 dev, or 1 proc × 2 forced devs) so every phase compiles the
@@ -80,7 +88,7 @@ def _run_worker(args: argparse.Namespace) -> None:
     from repro.optim import AdamConfig
     from repro.pipeline import ElasticConfig, PipelineConfig, build_pipeline
     from repro.train import TrainLoopConfig
-    from repro.train.loop import RestartSignal
+    from repro.train.loop import JsonlHistorySink, RestartSignal
 
     out = args.out
     hb = FileHeartbeatTransport(os.path.join(out, "hb"))
@@ -121,14 +129,20 @@ def _run_worker(args: argparse.Namespace) -> None:
     ranks = pipe.dataplane.process_ranks
     owned.extend(ranks if ranks is not None else range(pipe.world))
 
-    sink: list[dict] = []
+    # ONE durable sink across every phase/relaunch in this run dir: rows are
+    # fsynced as they land and duplicate (epoch, step) rows from a resumed
+    # epoch tail are suppressed — the idempotency the driver asserts.
+    sink = (JsonlHistorySink(os.path.join(out, "history.jsonl"))
+            if is_writer else [])
     outcome: dict = {"phase": args.phase, "world": args.world,
                      "nprocs": args.nprocs, "rank": args.rank,
                      "batch_per_rank": args.batch_per_rank,
                      "process_ranks": list(owned)}
     code = 0
     try:
-        _, history = pipe.fit(eval_fn=None, resume=True, history_sink=sink)
+        # eval_fn defaults to "auto": epoch-end val_mae through the
+        # distributed eval feeds — the metric the driver asserts parity on.
+        _, history = pipe.fit(resume=True, history_sink=sink)
         outcome["status"] = "done"
     except RestartSignal as sig:
         plan = sig.plan
@@ -158,10 +172,11 @@ def _run_worker(args: argparse.Namespace) -> None:
                         "dead_workers": dead or others})
         code = EXIT_REMESH
     if is_writer:
-        steps = [h["step"] for h in sink if "epoch_time_s" not in h]
+        rows = sink.rows  # what THIS incarnation contributed to the sink
+        steps = [h["step"] for h in rows if "epoch_time_s" not in h]
         outcome["steps"] = [min(steps), max(steps)] if steps else []
         with open(os.path.join(out, f"history_{args.phase}.json"), "w") as f:
-            json.dump(sink, f)
+            json.dump(rows, f)
             f.flush()
             os.fsync(f.fileno())
         with open(os.path.join(out, f"outcome_{args.phase}.json"), "w") as f:
@@ -207,6 +222,17 @@ def _read_json(path: str):
 def _losses(history: list[dict]) -> dict[int, float]:
     return {h["step"]: h["loss"] for h in history
             if "loss" in h and "epoch_time_s" not in h}
+
+
+def _evals(history: list[dict]) -> dict[int, float]:
+    """epoch -> val_mae from the epoch summary rows."""
+    return {h["epoch"]: h["val_mae"] for h in history
+            if "epoch_time_s" in h and "val_mae" in h}
+
+
+def _read_jsonl(path: str) -> list[dict]:
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
 
 
 def _hb_step(run: str, rank: int) -> int:
@@ -329,12 +355,35 @@ def test_elastic_grow_and_resume_on_real_processes(tmp_path, free_port,
               if "epoch_time_s" in h]
     assert epochs == [0, 1]
 
+    # ---- distributed EVAL parity (ISSUE 4): every epoch's val_mae — scored
+    #      through per-rank eval feeds in whatever topology the phase ran —
+    #      is bit-identical to the single-host window-weighted reference,
+    #      across the kill→shrink→grow cycle.
+    ref_evals = _evals(ref_hist)
+    assert set(ref_evals) == {0, 1}
+    merged_evals = {**_evals(hist_a), **_evals(hist_b), **_evals(hist_c)}
+    assert merged_evals == ref_evals
+
+    # ---- the ONE durable history.jsonl spanning all three relaunches:
+    #      every step row and every epoch/eval row appears exactly once
+    #      (JsonlHistorySink suppressed any resume re-logs) and the whole
+    #      file equals the uninterrupted reference.
+    durable = _read_jsonl(os.path.join(run, "history.jsonl"))
+    d_steps = [h["step"] for h in durable if "epoch_time_s" not in h]
+    assert sorted(d_steps) == list(range(1, total_steps + 1))
+    assert sorted(h["epoch"] for h in durable if "epoch_time_s" in h) == [0, 1]
+    assert _losses(durable) == ref_losses
+    assert _evals(durable) == ref_evals
+
     evidence = {
         "fleet": FLEET, "global_batch": GLOBAL_BATCH,
         "total_steps": total_steps, "killed_at_step": DIE_AT_STEP,
         "grow_at_step": grow_step,
         "phases": [out_a, out_b, out_c],
         "bit_identical_to_reference": merged == ref_losses,
+        "eval_bit_identical_to_reference": merged_evals == ref_evals,
+        "val_mae_per_epoch": ref_evals,
+        "durable_history_idempotent": len(d_steps) == len(set(d_steps)),
     }
     with open(os.path.join(results_dir, "multihost_evidence.json"), "w") as f:
         json.dump(evidence, f, indent=1)
@@ -363,13 +412,22 @@ def test_two_process_feed_assembly_matches_single_host(tmp_path, free_port,
                   devices=1, log=os.path.join(run, "mp1.log"))
     assert _wait(p0, timeout=240, what="2-process rank 0") == 0
     assert _wait(p1, timeout=240, what="2-process rank 1") == 0
-    ref_losses = _losses(_read_json(os.path.join(ref, "history_ref.json")))
-    mp_losses = _losses(_read_json(os.path.join(run, "history_mp.json")))
+    ref_hist = _read_json(os.path.join(ref, "history_ref.json"))
+    mp_hist = _read_json(os.path.join(run, "history_mp.json"))
+    ref_losses, mp_losses = _losses(ref_hist), _losses(mp_hist)
     assert mp_losses == ref_losses
+    # eval rode the distributed eval feeds on the 2-process gang: each
+    # process scored only its rank-block columns + the replicated tail, and
+    # the window-weighted val_mae is bit-identical to the single-host value
+    ref_evals, mp_evals = _evals(ref_hist), _evals(mp_hist)
+    assert set(ref_evals) == {0, 1}
+    assert mp_evals == ref_evals
     with open(os.path.join(results_dir, "multihost_feed_parity.json"),
               "w") as f:
         json.dump({"steps": len(mp_losses),
-                   "bit_identical": mp_losses == ref_losses}, f, indent=1)
+                   "bit_identical": mp_losses == ref_losses,
+                   "eval_bit_identical": mp_evals == ref_evals,
+                   "val_mae_per_epoch": ref_evals}, f, indent=1)
 
 
 # ====================================================================== main

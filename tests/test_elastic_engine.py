@@ -239,6 +239,11 @@ def test_grow_trajectory_bit_identical_when_batch_divides(tmp_path):
     """Losing HALF the fleet and growing back preserves the global batch
     exactly (8/2 and 8/4 both divide), so every drawn batch — and therefore
     the whole loss trajectory — is bit-identical to an uninterrupted run.
+    Epoch-end eval is left on (``eval_fn="auto"``): the eval pools are
+    re-placed alongside the train series on every re-mesh, and because the
+    global batch is preserved the eval chunk plan — and the window-weighted
+    ``val_mae`` — must ALSO be bit-identical in whatever topology the epoch
+    boundary lands in (ISSUE 4: eval works across shrink/grow re-meshes).
 
     Pinned to a 1-device mesh (logical worlds) so the compiled program is
     the same in every phase: bit-identity across a PHYSICAL topology change
@@ -249,9 +254,9 @@ def test_grow_trajectory_bit_identical_when_batch_divides(tmp_path):
     one_dev = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
                    ("data", "model"))
     smooth, smooth_hist = _grow_pipe(str(tmp_path / "a"), elastic=False,
-                                     mesh=one_dev).fit(eval_fn=None)
+                                     mesh=one_dev).fit()
     pipe = _grow_pipe(str(tmp_path / "b"), dead_ranks=(1, 2), mesh=one_dev)
-    bumpy, bumpy_hist = pipe.fit(eval_fn=None)
+    bumpy, bumpy_hist = pipe.fit()
 
     assert [r["kind"] for r in pipe.restarts] == ["shrink", "grow"]
     assert pipe.restarts[0]["world"] == WORLD - 2
@@ -263,6 +268,14 @@ def test_grow_trajectory_bit_identical_when_batch_divides(tmp_path):
     s_losses = {h["step"]: h["loss"] for h in smooth_hist if "loss" in h}
     b_losses = {h["step"]: h["loss"] for h in bumpy_hist if "loss" in h}
     assert s_losses == b_losses
+    # eval parity across the re-meshed run: same chunks, same weights, same
+    # program — bit-identical val_mae for every summarised epoch
+    s_evals = {h["epoch"]: h["val_mae"] for h in smooth_hist
+               if "epoch_time_s" in h}
+    b_evals = {h["epoch"]: h["val_mae"] for h in bumpy_hist
+               if "epoch_time_s" in h}
+    assert set(s_evals) == {0, 1}
+    assert b_evals == s_evals
 
 
 def test_meta_round_trip_across_two_remeshes(tmp_path):

@@ -9,6 +9,11 @@ trajectories bit-identical END to end, this file proves the index grids
 identical at the SOURCE for the whole parameter space, not just the
 hand-picked cases in test_pipeline.py).
 
+Plus the EVAL mirror of the contract (ISSUE 4 satellite): for every sampler
+× placement × world × pool size, the ``eval_feed(rank)`` column blocks plus
+the ragged ``eval_tail`` reproduce the global eval pool EXACTLY ONCE — no
+window dropped, none double-counted, pool order preserved.
+
 Runs under real hypothesis when installed, else under the seeded-example
 fallback from conftest.py.
 """
@@ -62,6 +67,72 @@ def test_feed_columns_reassemble_epoch_global(kind, world, batch, seed,
     blocks = grid.reshape(s.steps_per_epoch, world, batch)
     for r in range(world):
         assert np.array_equal(blocks[:, r, :], s.feed(r, epoch))
+
+
+@settings(max_examples=60, deadline=None)
+@given(kind=st.sampled_from(SAMPLERS),
+       world=st.integers(1, 6),
+       batch=st.integers(1, 4),
+       seed=st.integers(0, 2**16),
+       pool_n=st.integers(0, 40),
+       halo=st.sampled_from([True, False]))
+def test_eval_feed_columns_reproduce_pool_exactly_once(kind, world, batch,
+                                                       seed, pool_n, halo):
+    """concat([eval_feed(r, pool) for r]).ravel() ++ eval_tail(pool) == pool:
+    the eval pool is covered exactly once, rank-major, in pool order — the
+    invariant distributed evaluate() stands on."""
+    s = _build(kind, world, batch, seed, halo)
+    # distinct, non-contiguous ids so reassembly errors cannot alias
+    pool = (7 * np.arange(pool_n, dtype=np.int32) + 3)
+    steps = pool_n // (world * batch)
+    cols = np.concatenate([s.eval_feed(r, pool) for r in range(world)], axis=1)
+    tail = s.eval_tail(pool)
+    assert cols.shape == (steps, world * batch)
+    assert len(tail) == pool_n - steps * world * batch
+    assert np.array_equal(np.concatenate([cols.ravel(), tail]), pool)
+    # eval_global is exactly the full-chunk view of the same columns
+    assert np.array_equal(s.eval_global(pool), cols)
+    # rank r's eval feed is column block r of each full chunk (rank-major),
+    # and it is a pure function of the pool — no epoch, no shuffle
+    grid = pool[:steps * world * batch].reshape(steps, world, batch)
+    for r in range(world):
+        assert np.array_equal(s.eval_feed(r, pool), grid[:, r, :])
+        assert np.array_equal(s.eval_feed(r, pool),
+                              _build(kind, world, batch, seed,
+                                     halo).eval_feed(r, pool))
+
+
+@settings(max_examples=25, deadline=None)
+@given(placement_i=st.integers(0, 2),
+       world=st.integers(1, 5),
+       batch=st.integers(1, 3),
+       split=st.sampled_from(["val", "test"]),
+       seed=st.integers(0, 999))
+def test_dataplane_eval_feeds_cover_split_for_every_placement(placement_i,
+                                                              world, batch,
+                                                              split, seed):
+    """One layer up: whatever sampler ``build_dataplane`` instantiates for a
+    placement, its eval feeds + tail must cover the split pool exactly once,
+    and the single-process ``eval_grid`` must be their assembly."""
+    from repro.core import Placement
+    from repro.data import make_traffic_series
+    from repro.launch.mesh import make_host_mesh
+    from repro.pipeline import PipelineConfig, build_dataplane
+
+    placement = list(Placement)[placement_i]
+    dp = build_dataplane(
+        make_traffic_series(120, 2), WindowSpec(horizon=2, input_len=2),
+        make_host_mesh(),
+        PipelineConfig(batch_per_rank=batch, placement=placement,
+                       world=world, seed=seed))
+    pool = dp.eval_pool(split)
+    cols = np.concatenate([dp.eval_feed(r, split) for r in range(world)],
+                          axis=1)
+    tail = dp.eval_tail(split)
+    assert np.array_equal(np.concatenate([cols.ravel(), tail]), pool)
+    rows, grid_tail = dp.eval_grid(split)
+    assert np.array_equal(rows, cols)
+    assert np.array_equal(grid_tail, tail)
 
 
 @settings(max_examples=25, deadline=None)

@@ -1,0 +1,130 @@
+"""JsonlHistorySink: crash-durable, resume-idempotent history (ISSUE 4
+satellite bugfix).
+
+An exit-75 relaunch restores the latest checkpoint, which may sit BEFORE
+rows that were already logged (ckpt_every coarser than log_every, or a crash
+between a mid-epoch checkpoint and the epoch summary).  The resumed run then
+re-RUNS the tail of the epoch — training needs the steps — and re-logs step
+rows and the epoch summary (with its eval metrics) under the same
+``(epoch, step)`` coordinates.  The sink must keep the durable history free
+of those duplicates while still accepting every genuinely new row.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.loop import JsonlHistorySink, TrainLoopConfig, run_training
+
+
+class _StubSampler:
+    steps_per_epoch = 4
+
+    def epoch_global(self, epoch):
+        return np.arange(4)[:, None] + 10 * epoch
+
+
+def _stub_step(state, batch):
+    return state, {"loss": jnp.asarray(float(batch[0]))}
+
+
+def _run(sink, *, start_epoch=0, start_step=0, start_done=None, eval_fn=None):
+    return run_training(
+        state={}, train_step=_stub_step, sampler=_StubSampler(),
+        batch_of_starts=lambda row: row,
+        loop=TrainLoopConfig(epochs=1, log_every=1),
+        eval_fn=eval_fn, start_epoch=start_epoch, start_step=start_step,
+        start_done_in_epoch=start_done, history_sink=sink)
+
+
+def test_sink_rows_are_durable_and_loadable(tmp_path):
+    path = str(tmp_path / "h.jsonl")
+    sink = JsonlHistorySink(path)
+    _run(sink, eval_fn=lambda st: {"val_mae": 1.25})
+    sink.close()
+    durable = JsonlHistorySink(path).load()
+    assert durable == sink.rows
+    steps = [r["step"] for r in durable if "epoch_time_s" not in r]
+    assert steps == [1, 2, 3, 4]
+    summaries = [r for r in durable if "epoch_time_s" in r]
+    assert len(summaries) == 1 and summaries[0]["val_mae"] == 1.25
+
+
+def test_sink_suppresses_duplicate_rows_on_resume(tmp_path):
+    """Simulated crash-after-summary: the first incarnation logged the whole
+    epoch (summary + eval row included) but the last durable checkpoint was
+    mid-epoch, so the relaunch resumes at done=2 and re-runs steps 3..4 and
+    the summary.  The durable file must contain each row exactly once."""
+    path = str(tmp_path / "h.jsonl")
+    first = JsonlHistorySink(path)
+    _run(first, eval_fn=lambda st: {"val_mae": 2.0})
+    first.close()
+
+    relaunch = JsonlHistorySink(path)  # fresh process, same durable file
+    _run(relaunch, start_step=2, start_done=2,
+         eval_fn=lambda st: {"val_mae": 2.0})
+    assert relaunch.rows == []  # everything it re-logged was already durable
+    relaunch.close()
+
+    durable = JsonlHistorySink(path).load()
+    keys = [(("summary" if "epoch_time_s" in r else "step"),
+             r.get("epoch"), r.get("step")) for r in durable]
+    assert len(keys) == len(set(keys))
+    steps = [r["step"] for r in durable if "epoch_time_s" not in r]
+    assert steps == [1, 2, 3, 4]
+    assert sum("epoch_time_s" in r for r in durable) == 1
+
+
+def test_sink_accepts_new_rows_after_resume(tmp_path):
+    """A resume that runs PAST the previously-durable point keeps appending:
+    only the overlap is suppressed, nothing new is lost."""
+    path = str(tmp_path / "h.jsonl")
+    first = JsonlHistorySink(path)
+    # first incarnation crashed after logging steps 1..2 (no summary yet)
+    first.append({"step": 1, "epoch": 0, "loss": 0.5})
+    first.append({"step": 2, "epoch": 0, "loss": 0.4})
+    first.close()
+    relaunch = JsonlHistorySink(path)
+    _run(relaunch)  # full epoch re-run: logs steps 1..4 + summary
+    # the overlap (1..2) was suppressed; the new tail and summary landed
+    assert [r["step"] for r in relaunch.rows
+            if "epoch_time_s" not in r] == [3, 4]
+    assert sum("epoch_time_s" in r for r in relaunch.rows) == 1
+    relaunch.close()
+    durable = JsonlHistorySink(path).load()
+    assert sorted(r["step"] for r in durable
+                  if "epoch_time_s" not in r) == [1, 2, 3, 4]
+    assert sum("epoch_time_s" in r for r in durable) == 1
+
+
+def test_sink_tolerates_torn_final_line(tmp_path):
+    """A crash mid-write leaves a torn last line: the row was not durable,
+    so the reload drops it and the relaunch may re-log it."""
+    path = str(tmp_path / "h.jsonl")
+    sink = JsonlHistorySink(path)
+    sink.append({"step": 1, "epoch": 0, "loss": 0.5})
+    sink.close()
+    with open(path, "a") as f:
+        f.write('{"step": 2, "epoch": 0, "lo')  # torn by the "crash"
+    relaunch = JsonlHistorySink(path)
+    assert [r["step"] for r in relaunch.load()] == [1]
+    assert relaunch.append({"step": 2, "epoch": 0, "loss": 0.25})  # re-logged
+    assert not relaunch.append({"step": 1, "epoch": 0, "loss": 0.5})
+    relaunch.close()
+    assert [r["step"] for r in JsonlHistorySink(path).load()] == [1, 2]
+
+
+def test_sink_is_a_dropin_for_the_list_protocol(tmp_path):
+    """run_training only calls .append(row); the sink's accepted-row list
+    mirrors exactly what a plain-list sink would have captured on a fresh
+    run."""
+    path = str(tmp_path / "h.jsonl")
+    plain: list = []
+    _run(plain)
+    sink = JsonlHistorySink(path)
+    _run(sink)
+    sink.close()
+    strip = lambda rows: [{k: v for k, v in r.items() if k != "epoch_time_s"}
+                          for r in rows]
+    assert strip(sink.rows) == strip(plain)
