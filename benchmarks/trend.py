@@ -1,0 +1,123 @@
+"""Perf-trend gate over successive ``BENCH_smoke.json`` artifacts.
+
+``benchmarks/smoke.py`` records one perf point per push; this module closes
+the ROADMAP loop by COMPARING two points: CI downloads the previous run's
+``bench-smoke`` artifact and gates the current one against it —
+
+    python -m benchmarks.trend --prev prev/BENCH_smoke.json \
+                               --cur results/BENCH_smoke.json
+
+Per headline field the comparator computes a REGRESSION fraction in the
+field's bad direction (throughput falling, latencies/memory rising):
+
+- ratio fields (tokens/s, gather µs, peak RSS) compare relatively —
+  ``0.30`` means 30% worse than the previous point;
+- the table3 overhead is already a percentage, so it compares in absolute
+  percentage POINTS (a +12-point jump = 0.12) — a relative ratio on a
+  near-zero (or negative!) overhead baseline would be meaningless.
+
+Verdicts: regression > ``--fail`` (default 25%) fails the job, >
+``--warn`` (default 10%) prints a warning, improvements and small noise
+pass.  Missing fields (schema drift) are reported but never fail — a NEW
+headline metric must not brick CI until the artifact history catches up.
+
+CPU CI wall times are noisy; the warn band is where noise lives, the fail
+band is reserved for real regressions (a 25% slide in the gather/step hot
+path is far outside runner jitter).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: headline field -> (better direction, comparison kind)
+HEADLINE_FIELDS: dict[str, tuple[str, str]] = {
+    "tokens_per_s": ("higher", "ratio"),
+    "gather_dense_us": ("lower", "ratio"),
+    "gather_pallas_interpret_us": ("lower", "ratio"),
+    "step_overhead_vs_base_pct": ("lower", "points"),
+    "peak_rss_bytes": ("lower", "ratio"),
+}
+
+
+def compare_headlines(prev: dict, cur: dict, *, warn: float = 0.10,
+                      fail: float = 0.25) -> list[dict]:
+    """Compare two ``headline`` dicts field by field.
+
+    Returns one row per known field:
+    ``{field, prev, cur, regression, verdict}`` with verdict in
+    ``ok | warn | fail | missing`` — ``regression`` is the fraction worse
+    (negative = improvement), None when incomparable.
+    """
+    rows = []
+    for field, (direction, kind) in HEADLINE_FIELDS.items():
+        p, c = prev.get(field), cur.get(field)
+        if p is None or c is None:
+            rows.append({"field": field, "prev": p, "cur": c,
+                         "regression": None, "verdict": "missing"})
+            continue
+        p, c = float(p), float(c)
+        if kind == "points":
+            # already percentages: compare absolute points on the 0-1 scale
+            reg = (c - p) / 100.0 if direction == "lower" else (p - c) / 100.0
+        elif p <= 0:
+            # a non-positive ratio baseline can't anchor a relative change
+            rows.append({"field": field, "prev": p, "cur": c,
+                         "regression": None, "verdict": "missing"})
+            continue
+        elif direction == "lower":
+            reg = c / p - 1.0
+        else:
+            reg = 1.0 - c / p
+        verdict = "fail" if reg > fail else "warn" if reg > warn else "ok"
+        rows.append({"field": field, "prev": p, "cur": c,
+                     "regression": reg, "verdict": verdict})
+    return rows
+
+
+def _load_headline(path: str) -> dict:
+    with open(path) as f:
+        record = json.load(f)
+    headline = record.get("headline")
+    if not isinstance(headline, dict):
+        raise SystemExit(f"{path}: no 'headline' object — not a bench-smoke "
+                         f"record?")
+    return headline
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--prev", required=True,
+                    help="previous BENCH_smoke.json (older artifact)")
+    ap.add_argument("--cur", required=True,
+                    help="current BENCH_smoke.json (this run)")
+    ap.add_argument("--warn", type=float, default=0.10,
+                    help="warn above this regression fraction")
+    ap.add_argument("--fail", type=float, default=0.25,
+                    help="fail above this regression fraction")
+    args = ap.parse_args(argv)
+    rows = compare_headlines(_load_headline(args.prev),
+                             _load_headline(args.cur),
+                             warn=args.warn, fail=args.fail)
+    print(f"{'field':32} {'prev':>14} {'cur':>14} {'regression':>11} verdict")
+    for r in rows:
+        reg = "n/a" if r["regression"] is None else f"{r['regression']:+.1%}"
+        print(f"{r['field']:32} {r['prev'] if r['prev'] is not None else '-':>14} "
+              f"{r['cur'] if r['cur'] is not None else '-':>14} {reg:>11} "
+              f"{r['verdict']}")
+    warns = [r for r in rows if r["verdict"] == "warn"]
+    fails = [r for r in rows if r["verdict"] == "fail"]
+    for r in warns:
+        print(f"::warning::bench-smoke {r['field']} regressed "
+              f"{r['regression']:+.1%} vs the previous artifact")
+    if fails:
+        for r in fails:
+            print(f"::error::bench-smoke {r['field']} regressed "
+                  f"{r['regression']:+.1%} (> {args.fail:.0%}) vs the "
+                  f"previous artifact")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,8 @@ from repro.distributed.checkpoint import (Checkpointer, checkpoint_meta,
                                           latest_step, restore)
 from repro.distributed.elastic import (ElasticPlan, HeartbeatMonitor,
                                        plan_remesh, scale_batch_or_steps)
+from repro.distributed.leader import (LeaderCheckpointer, LeaderHistorySink,
+                                      LeaderTracker)
 from repro.distributed.transport import (FileHeartbeatTransport,
                                          TcpHeartbeatCollector,
                                          TcpHeartbeatEmitter, make_transport)
@@ -9,4 +11,5 @@ from repro.distributed.transport import (FileHeartbeatTransport,
 __all__ = ["Checkpointer", "restore", "latest_step", "checkpoint_meta",
            "HeartbeatMonitor", "plan_remesh", "ElasticPlan",
            "scale_batch_or_steps", "FileHeartbeatTransport",
-           "TcpHeartbeatCollector", "TcpHeartbeatEmitter", "make_transport"]
+           "TcpHeartbeatCollector", "TcpHeartbeatEmitter", "make_transport",
+           "LeaderTracker", "LeaderCheckpointer", "LeaderHistorySink"]

@@ -36,7 +36,11 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(_path_str(p) for p in path)
-        flat[key] = np.asarray(leaf)
+        # A real COPY, not np.asarray: asarray aliases host-resident leaves
+        # (and may view a CPU device buffer), so the async writer — and the
+        # leader-succession standby holding this snapshot across a crash —
+        # would see whatever the caller mutated/donated afterwards.
+        flat[key] = np.array(leaf)
     return flat
 
 
@@ -82,19 +86,42 @@ class Checkpointer:
         self._error: BaseException | None = None
 
     # ------------------------------------------------------------------- save
+    @staticmethod
+    def snapshot(state: Any) -> dict[str, np.ndarray]:
+        """Device→host snapshot of ``state`` — the synchronous half of
+        :meth:`save`, exposed so a *standby* writer (leader succession:
+        :class:`repro.distributed.leader.LeaderCheckpointer`) can hold the
+        exact would-be checkpoint in host memory without writing anything.
+        Crucially the copy is taken while the buffers are still valid: after
+        a failed collective the donated device state may be unusable, but a
+        held host snapshot can always be written."""
+        return _flatten(state)
+
     def save(self, state: Any, *, step: int, meta: dict | None = None) -> None:
         """``meta``: JSON-serialisable run coordinates stored in the manifest
         (e.g. the elastic engine's {epoch, done_in_epoch}) — read back with
         :func:`checkpoint_meta` so a restart into a topology with a different
         steps_per_epoch can still resume at the same (epoch, step)."""
+        # Wait BEFORE flattening: materialising the new host snapshot while
+        # the previous write still holds its own would double peak host
+        # memory for the duration of the slow write.
+        self.wait()
+        self.save_snapshot(_flatten(state), step=step, meta=meta)
+
+    def save_snapshot(self, flat: dict[str, np.ndarray], *, step: int,
+                      meta: dict | None = None, sync: bool = False) -> None:
+        """Write an already-host-resident :meth:`snapshot`.  ``sync=True``
+        forces a synchronous write even on an async checkpointer — the
+        succession path wants the takeover checkpoint durable before the
+        process exits for relaunch."""
         self.wait()  # one in-flight write at a time
-        flat = _flatten(state)  # device->host snapshot happens HERE, synchronously
-        if self.async_write:
+        if self.async_write and not sync:
             self._thread = threading.Thread(
                 target=self._write, args=(flat, step, meta), daemon=True)
             self._thread.start()
         else:
             self._write(flat, step, meta)
+            self.wait()  # surface a sync-write failure immediately
 
     def _write(self, flat: dict[str, np.ndarray], step: int,
                meta: dict | None = None) -> None:

@@ -50,6 +50,11 @@ class ElasticPlan:
     # Workers re-admitted by a GROW plan (empty on shrink).  A plan is one or
     # the other, never both: recovery is only planned from a healthy fleet.
     readmitted_workers: tuple[int, ...] = ()
+    # The rank that decided this plan — rank 0 in the classic single-decider
+    # setup, the leader-succession winner (lowest live rank, see
+    # repro.distributed.leader) after the original decider died.  None when
+    # the caller did not thread leadership through.
+    decided_by: int | None = None
 
     @property
     def kind(self) -> str:
@@ -126,8 +131,15 @@ def plan_remesh(
     model_parallel: int,
     chips_per_host: int = 4,
     axis_names: tuple[str, str] = ("data", "model"),
+    decided_by: int | None = None,
 ) -> ElasticPlan | None:
     """Largest healthy mesh keeping TP groups whole.
+
+    The planner is pure and rank-agnostic — ``unhealthy`` may include rank
+    0 (the classic decider) like any other worker; WHO runs the planner is
+    the leader-succession layer's problem (``repro.distributed.leader``:
+    lowest live rank), and ``decided_by`` merely records that rank on the
+    emitted plan for attribution.
 
     Workers are hosts of ``chips_per_host`` chips; a TP group spans
     ``model_parallel`` chips, so losing a host removes
@@ -160,6 +172,7 @@ def plan_remesh(
             readmitted_workers=readmitted,
             reason=f"re-admitted {back_groups} TP group(s) of recovered "
                    f"workers {sorted(set(recovered))}",
+            decided_by=decided_by,
         )
     n_groups = n_total // hosts_per_group
     bad_groups = {w // hosts_per_group for w in unhealthy}
@@ -174,6 +187,7 @@ def plan_remesh(
         dropped_workers=dropped,
         reason=f"dropped {len(bad_groups)} TP group(s) containing unhealthy hosts "
                f"{sorted(unhealthy)}",
+        decided_by=decided_by,
     )
 
 

@@ -23,10 +23,21 @@ process can both emit and poll, so all survivors of a worker loss reach the
 same verdict from the same files.
 
 :class:`TcpHeartbeatCollector` / :class:`TcpHeartbeatEmitter` — cross-host.
-The collector (rank 0) accepts newline-delimited JSON beats over TCP and is
-the only process that polls; emitters reconnect on failure, so a rebooted
-worker resumes announcing itself — which is exactly the signal the GROW
-planner waits for.
+A collector accepts newline-delimited JSON beats over TCP; emitters
+reconnect on failure, so a rebooted worker resumes announcing itself —
+which is exactly the signal the GROW planner waits for.
+
+The TCP path is no longer single-decider.  A ``tcp://a:p,b:p,...`` spec is
+an ordered FAILOVER LIST in leader-succession order: address ``k`` is the
+collector candidate on the host owning rank ``k``.  Each serving collector
+*peer-mirrors*: every beat it accepts first-hand (a socket delivery or its
+own local ``emit``) is replicated — tagged ``fwd`` so replicas are never
+re-replicated — to the other collectors, so the standbys on the
+next-lowest ranks hold the same beat table as the primary.  Emitters dial
+the first reachable address and fail over down the list, so when the
+primary's host dies its beats land on the standby that is about to become
+the leader — a fully-primed successor (see
+:mod:`repro.distributed.leader`).
 
 Beats carry a per-emitter monotonically increasing ``seq`` so "reported in
 since the last poll" is well-defined even when the step counter repeats
@@ -36,6 +47,7 @@ from __future__ import annotations
 
 import json
 import os
+import queue
 import socket
 import tempfile
 import threading
@@ -116,16 +128,40 @@ class TcpHeartbeatCollector:
     Binds immediately (``port=0`` picks a free one — read ``.port``); a
     daemon thread accepts connections and one reader thread per emitter
     drains newline-delimited JSON beats into the latest-beat table.  The
-    collector can also ``emit`` for its own local ranks directly — rank 0 is
-    a worker too and should not dial itself.
+    collector can also ``emit`` for its own local ranks directly — the
+    collector's host is a worker too and should not dial itself.
+
+    ``mirrors``: peer collector addresses (the REST of the failover list).
+    Every first-hand beat — delivered on a socket without the ``fwd`` tag,
+    or emitted locally — is replicated to them fire-and-forget, so a
+    standby collector holds the same beat table as the primary and a
+    leader-succession takeover starts from primed ``snapshot()`` /
+    ``step_feed()`` state instead of a blank one.  Forwarded beats are
+    stored but never re-forwarded (no mirror loops), and each collector
+    re-stamps its own ``seq``, so the since-last-poll contract holds
+    per-collector no matter which peer a beat arrived through.
     """
 
-    def __init__(self, host: str = "127.0.0.1", port: int = 0):
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 *, mirrors: tuple[str, ...] | list[str] = ()):
         self._lock = threading.Lock()
         self._beats: dict[int, dict] = {}
         self._last_polled: dict[int, int] = {}
         self._seq = 0
         self._closed = False
+        self._conns: set[socket.socket] = set()
+        self._mirrors = [TcpHeartbeatEmitter(a) for a in mirrors]
+        # Replication runs on ONE dedicated pump thread fed by a bounded
+        # queue: _store is called from the training loop (local emit) and
+        # from every per-connection drain thread, and a dial to a dead or
+        # partitioned mirror costs up to connect_timeout — paying that in
+        # the step loop would throttle training, and concurrent send()s on
+        # one mirror socket would race/interleave.  A full queue drops the
+        # beat, like every other emit path: silence is the signal.
+        self._mirror_q: queue.Queue | None = None
+        if self._mirrors:
+            self._mirror_q = queue.Queue(maxsize=1024)
+            threading.Thread(target=self._mirror_pump, daemon=True).start()
         self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._srv.bind((host, port))
@@ -141,33 +177,60 @@ class TcpHeartbeatCollector:
                 conn, _ = self._srv.accept()
             except OSError:
                 return  # socket closed
+            with self._lock:
+                self._conns.add(conn)
             threading.Thread(target=self._drain, args=(conn,),
                              daemon=True).start()
 
     def _drain(self, conn: socket.socket) -> None:
         buf = b""
-        with conn:
-            while True:
-                try:
-                    chunk = conn.recv(4096)
-                except OSError:
-                    return
-                if not chunk:
-                    return
-                buf += chunk
-                while b"\n" in buf:
-                    line, buf = buf.split(b"\n", 1)
+        try:
+            with conn:
+                while True:
                     try:
-                        b = json.loads(line)
-                        self._store(int(b["rank"]), int(b["step"]),
-                                    b.get("step_time"))
-                    except (ValueError, KeyError):
-                        continue
+                        chunk = conn.recv(4096)
+                    except OSError:
+                        return
+                    if not chunk:
+                        return
+                    buf += chunk
+                    while b"\n" in buf:
+                        line, buf = buf.split(b"\n", 1)
+                        try:
+                            b = json.loads(line)
+                            self._store(int(b["rank"]), int(b["step"]),
+                                        b.get("step_time"),
+                                        forwarded=bool(b.get("fwd")))
+                        except (ValueError, KeyError, TypeError):
+                            continue
+        finally:
+            with self._lock:
+                self._conns.discard(conn)
 
-    def _store(self, rank: int, step: int, step_time: float | None) -> None:
+    def _store(self, rank: int, step: int, step_time: float | None,
+               *, forwarded: bool = False) -> None:
         with self._lock:
             self._seq += 1
             self._beats[rank] = _beat(rank, step, step_time, self._seq)
+        if forwarded or self._mirror_q is None:
+            return
+        # Replicate first-hand beats to the standby collectors via the pump
+        # thread, fire-and-forget: a dead mirror is a dead HOST, and the
+        # surviving collectors keep working without it.
+        try:
+            self._mirror_q.put_nowait({"rank": rank, "step": step,
+                                       "step_time": step_time, "fwd": True})
+        except queue.Full:
+            pass
+
+    def _mirror_pump(self) -> None:
+        while not self._closed:
+            try:
+                payload = self._mirror_q.get(timeout=0.5)
+            except queue.Empty:
+                continue
+            for m in self._mirrors:
+                m.send(payload)
 
     # ------------------------------------------------------ transport contract
     def emit(self, rank: int, step: int, step_time: float | None = None) -> None:
@@ -190,10 +253,34 @@ class TcpHeartbeatCollector:
 
     def close(self) -> None:
         self._closed = True
+        # shutdown() BEFORE close(): the acceptor thread is blocked inside
+        # accept(), which holds the kernel's open file description — a bare
+        # close() leaves the socket LISTENing forever and the port can
+        # never be re-bound by a restarted or successor collector.
+        try:
+            self._srv.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass  # ENOTCONN on some platforms: the close below suffices
         try:
             self._srv.close()
         except OSError:
             pass
+        # Close accepted connections too, or their drain threads would keep
+        # the local port busy and a RESTARTED collector (or the successor
+        # re-binding a failover address) could never re-bind it.
+        with self._lock:
+            conns, self._conns = set(self._conns), set()
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                c.close()
+            except OSError:
+                pass
+        for m in self._mirrors:
+            m.close()
 
 
 class TcpHeartbeatEmitter:
@@ -204,67 +291,130 @@ class TcpHeartbeatEmitter:
     (``retry_after`` seconds) before dialling again: against a PARTITIONED
     collector (SYNs silently dropped) every connection attempt costs the
     full ``connect_timeout``, and paying that inside the step loop on every
-    step would throttle training indefinitely."""
+    step would throttle training indefinitely.
 
-    def __init__(self, address: str, *, connect_timeout: float = 2.0,
-                 retry_after: float = 5.0):
-        host, port = address.rsplit(":", 1)
-        self._addr = (host, int(port))
+    ``addresses`` may be an ordered FAILOVER list (or one ``host:port``
+    string): the emitter dials the first reachable address, sticks to it,
+    and on a lost connection resumes the search FROM that address down the
+    list (wrapping) — so when the primary collector's host dies, beats
+    land on the standby collector next in the leader-succession order.
+    Only a full fruitless sweep of the list arms the backoff; a failed
+    send on an established socket still gets its immediate re-dial."""
+
+    def __init__(self, addresses: str | list[str] | tuple[str, ...], *,
+                 connect_timeout: float = 2.0, retry_after: float = 5.0):
+        if isinstance(addresses, str):
+            addresses = [a for a in addresses.split(",") if a]
+        if not addresses:
+            raise ValueError("TcpHeartbeatEmitter needs at least one address")
+        self._addrs = [(h, int(p))
+                       for h, p in (a.rsplit(":", 1) for a in addresses)]
+        self._i = 0  # index of the address the current/last socket dialled
         self._sock: socket.socket | None = None
         self._connect_timeout = connect_timeout
         self._retry_after = retry_after
         self._next_dial = 0.0
+        # Serialises send(): the socket teardown-on-error races any second
+        # caller, and interleaved partial sendall()s would tear JSON lines.
+        self._send_lock = threading.Lock()
 
     def emit(self, rank: int, step: int, step_time: float | None = None) -> None:
-        line = (json.dumps({"rank": int(rank), "step": int(step),
-                            "step_time": step_time}) + "\n").encode()
-        for _ in range(2):  # current socket, then one fresh reconnect
-            if self._sock is None:
-                if time.monotonic() < self._next_dial:
-                    return  # backing off: drop the beat, stay fast
+        self.send({"rank": int(rank), "step": int(step),
+                   "step_time": step_time})
+
+    def send(self, payload: dict) -> None:
+        """Fire-and-forget one JSON line (the collector mirrors ride this
+        too, with their ``fwd``-tagged payloads)."""
+        line = (json.dumps(payload) + "\n").encode()
+        with self._send_lock:
+            for _ in range(2):  # current socket, then one fresh dial sweep
+                if self._sock is None and not self._dial():
+                    return  # all addresses down or backing off: drop it
                 try:
-                    self._sock = socket.create_connection(
-                        self._addr, timeout=self._connect_timeout)
-                except OSError:
-                    # Only a failed DIAL arms the backoff: a failed SEND on
-                    # an established socket (collector restarted) must still
-                    # get its immediate fresh-reconnect attempt below.
-                    self._next_dial = time.monotonic() + self._retry_after
+                    self._sock.sendall(line)
                     return
+                except OSError:
+                    try:
+                        self._sock.close()
+                    except OSError:
+                        pass
+                    self._sock = None
+
+    def _dial(self) -> bool:
+        """One failover sweep: current address first, then down the list.
+        The per-address timeout divides by the list length so a fully
+        partitioned sweep costs ~one ``connect_timeout`` total — the
+        worst-case step-loop stall must not scale with the failover
+        depth."""
+        if time.monotonic() < self._next_dial:
+            return False  # backing off: stay fast inside the step loop
+        # Floored so a LONG list can't shrink the per-dial budget below
+        # realistic TCP connect latency (a healthy-but-distant collector
+        # must not read as down just because the succession list is deep).
+        per_addr = max(self._connect_timeout / len(self._addrs), 0.5)
+        for k in range(len(self._addrs)):
+            j = (self._i + k) % len(self._addrs)
             try:
-                self._sock.sendall(line)
-                return
+                self._sock = socket.create_connection(
+                    self._addrs[j], timeout=per_addr)
+                self._i = j
+                return True
             except OSError:
+                continue
+        self._next_dial = time.monotonic() + self._retry_after
+        return False
+
+    def close(self) -> None:
+        # Under _send_lock: a bare close() would be exactly the "second
+        # caller" race the lock exists for — nulling _sock between an
+        # in-flight send()'s None-check and its sendall (the collector's
+        # mirror pump closes emitters another thread may be sending on).
+        with self._send_lock:
+            if self._sock is not None:
                 try:
                     self._sock.close()
                 except OSError:
                     pass
                 self._sock = None
 
-    def close(self) -> None:
-        if self._sock is not None:
-            try:
-                self._sock.close()
-            except OSError:
-                pass
-            self._sock = None
+
+def tcp_addresses(spec: str) -> list[str] | None:
+    """The ordered collector-candidate list of a ``tcp://`` spec (None for
+    other transports).  The one parser of the failover grammar — callers
+    deciding serve/serve_index (e.g. the launcher's "do I bind slot k?")
+    must use this rather than re-splitting the flag themselves."""
+    if not spec.startswith("tcp://"):
+        return None
+    return [a for a in spec[len("tcp://"):].split(",") if a]
 
 
-def make_transport(spec: str, *, serve: bool = False):
+def make_transport(spec: str, *, serve: bool = False, serve_index: int = 0):
     """Build a transport from a launcher flag.
 
-    ``file:/shared/dir``  -> :class:`FileHeartbeatTransport` (both halves).
-    ``tcp://host:port``   -> :class:`TcpHeartbeatCollector` when ``serve``
-    (the monitor process binds the address) else :class:`TcpHeartbeatEmitter`
-    (workers dial it).
+    ``file:/shared/dir`` -> :class:`FileHeartbeatTransport` (both halves —
+    the file transport is symmetric, every process can emit AND poll).
+
+    ``tcp://a:p,b:p,...`` -> an ordered failover list in leader-succession
+    order (one address per collector candidate; a single ``tcp://host:port``
+    is the list of one).  With ``serve`` this process binds address
+    ``serve_index`` and peer-mirrors accepted beats to every OTHER address
+    (:class:`TcpHeartbeatCollector`); without it the workers dial the first
+    reachable address and fail over down the list
+    (:class:`TcpHeartbeatEmitter`).
     """
     if spec.startswith("file:"):
         return FileHeartbeatTransport(spec[len("file:"):])
-    if spec.startswith("tcp://"):
-        addr = spec[len("tcp://"):]
+    addrs = tcp_addresses(spec)
+    if addrs is not None:
         if serve:
-            host, port = addr.rsplit(":", 1)
-            return TcpHeartbeatCollector(host=host, port=int(port))
-        return TcpHeartbeatEmitter(addr)
+            if not 0 <= serve_index < len(addrs):
+                raise ValueError(
+                    f"serve_index {serve_index} outside the {len(addrs)}-entry "
+                    f"failover list {addrs!r}")
+            host, port = addrs[serve_index].rsplit(":", 1)
+            mirrors = [a for i, a in enumerate(addrs) if i != serve_index]
+            return TcpHeartbeatCollector(host=host, port=int(port),
+                                         mirrors=mirrors)
+        return TcpHeartbeatEmitter(addrs)
     raise ValueError(f"unknown heartbeat transport {spec!r}; "
-                     "expected file:<dir> or tcp://<host>:<port>")
+                     "expected file:<dir> or tcp://<host>:<port>[,host:port...]")

@@ -20,9 +20,15 @@ land in the crash-durable `--history-out` sink.  `--elastic` attaches the
 heartbeat/re-mesh policy so worker loss shrinks the data axis and resumes
 from the latest checkpoint instead of killing the run; when the worker
 returns, the inverse GROW plan re-admits it with the per-worker batch scaled
-back down.  `--heartbeat file:<dir>|tcp://host:port` replaces the simulated
-all-healthy feed with a REAL transport: every process emits its ranks' beats
-each step, and process 0 runs the monitor over them.
+back down.  `--heartbeat file:<dir>|tcp://a:p[,b:p,...]` replaces the
+simulated all-healthy feed with a REAL transport: every process emits its
+ranks' beats each step, and every collector-capable process runs the monitor
+over them — but only the LEADER (lowest live rank, see
+`repro.distributed.leader`) acts on a verdict.  A `tcp://` spec may be an
+ordered failover list: address k is served by process k (beats peer-mirror
+between collectors, emitters fail over down the list), so when host 0 dies
+the successor's collector is already primed and it takes over plan emission,
+checkpoint writing and the durable history sink.
 
 Single-process runs re-mesh in place.  A real fleet cannot (a dead peer's
 shards are gone and its collectives would hang), so under
@@ -57,14 +63,15 @@ from repro.configs import get_arch
 from repro.core import IndexDataset, Placement, WindowSpec
 from repro.data import (gaussian_adjacency, make_token_stream, make_traffic_series,
                         random_sensor_coords, transition_matrices)
-from repro.distributed import latest_step, make_transport
+from repro.distributed import (LeaderHistorySink, LeaderTracker, latest_step,
+                               make_transport)
+from repro.distributed.transport import tcp_addresses
 from repro.launch.mesh import make_host_mesh
 from repro.models import dcrnn, pgt_dcrnn
 from repro.models.lm import model as lm
 from repro.optim import AdamConfig, warmup_cosine
 from repro.pipeline import ElasticConfig, PipelineConfig, build_pipeline
-from repro.train.loop import (JsonlHistorySink, RestartSignal,
-                              TrainLoopConfig)
+from repro.train.loop import RestartSignal, TrainLoopConfig
 
 
 def _train_stgnn(arch, args, adam, sched, loop: TrainLoopConfig,
@@ -105,7 +112,7 @@ def _train_stgnn(arch, args, adam, sched, loop: TrainLoopConfig,
         step = latest_step(loop.ckpt_dir)
         if step is not None:
             print(f"resuming from step {step}")
-    transport = _wire_heartbeat(pipe, args)
+    transport = _wire_heartbeat(pipe, args, sink)
     try:
         return pipe.fit(resume=args.resume, history_sink=sink)
     finally:
@@ -148,9 +155,25 @@ def _train_lm(arch, args, adam, sched, loop: TrainLoopConfig,
         step = latest_step(loop.ckpt_dir)
         if step is not None:
             print(f"resuming from step {step}")
-    transport = _wire_heartbeat(pipe, args)
+
+    # Held-out LM evaluation through the SAME distributed eval feeds the
+    # ST-GNN path rides (ISSUE 5 satellite, ex-ROADMAP item): the `lm`
+    # gather reconstructs (tokens, shifted labels) for the val pool's
+    # window ids, Engine.evaluate window-weights full chunks + the ragged
+    # tail, and the launcher reports both the mean token cross-entropy and
+    # its perplexity.  Same epoch-end cadence knob (--eval-every) as the
+    # ST-GNN path; bit-identical across process counts for the same
+    # reasons (every process derives the same chunk plan).
+    if len(ds.val_windows) > 0:
+        def eval_fn(st):
+            val_loss = pipe.evaluate(st["params"], split="val")
+            return {"val_loss": val_loss,
+                    "val_ppl": float(np.exp(np.minimum(val_loss, 30.0)))}
+    else:
+        eval_fn = None
+    transport = _wire_heartbeat(pipe, args, sink)
     try:
-        return pipe.fit(resume=args.resume, eval_fn=None,
+        return pipe.fit(resume=args.resume, eval_fn=eval_fn,
                         history_sink=sink)
     finally:
         if transport is not None:
@@ -170,15 +193,29 @@ def _elastic_config(args) -> ElasticConfig | None:
                          target_world=args.target_world or None)
 
 
-def _wire_heartbeat(pipe, args):
+def _wire_heartbeat(pipe, args, sink=None):
     """Attach a real transport to an elastic pipeline: every process emits
-    beats for the feed ranks it owns; process 0 (the only process whose
-    monitor verdict matters — one decider, no split-brain) consumes them.
+    beats for the feed ranks it owns; every process that CAN collect polls
+    them, but only the current LEADER — lowest live rank, tracked by a
+    ``LeaderTracker`` over the same beat stream — acts on a verdict.  One
+    decider at a time (no split-brain races on plans or checkpoint
+    coordinates), yet the decider role survives the death of process 0:
+    the successor's monitor state is already primed when it takes over.
     Returns the transport (caller closes it) or None."""
     if not args.heartbeat or pipe.elastic is None:
         return None
-    serve = jax.process_index() == 0
-    transport = make_transport(args.heartbeat, serve=serve)
+    idx = jax.process_index()
+    addrs = tcp_addresses(args.heartbeat)
+    if addrs is not None:
+        # Address k of the failover list is served by process k; processes
+        # beyond the list emit only.  The list length therefore bounds the
+        # succession depth — ship one address per host that may ever lead.
+        serve = idx < len(addrs)
+        transport = make_transport(args.heartbeat, serve=serve,
+                                   serve_index=idx)
+    else:
+        serve = True  # the file transport is symmetric: every process polls
+        transport = make_transport(args.heartbeat)
 
     def emitter(step: int) -> None:
         # Re-read the topology every step: an in-process re-mesh changes the
@@ -188,12 +225,21 @@ def _wire_heartbeat(pipe, args):
         for r in (ranks if ranks is not None else range(pipe.world)):
             transport.emit(r, step)
 
-    # step_feed only on process 0 even for the file transport (where every
-    # process COULD read the shared directory): one decider, or each process
-    # would flag the same death at a slightly different step and race
-    # divergent plans/checkpoint coordinates.
+    tracker = None
+    if serve:
+        # Only collector-capable processes can become the leader (a
+        # non-polling process would decide plans off the simulated
+        # all-healthy feed).  The rest keep leader=None, i.e. the fixed
+        # process-0 gate — false for them by construction — and never
+        # standby-buffer history rows they could never flush.
+        tracker = LeaderTracker(pipe.world,
+                                timeout=args.heartbeat_timeout)
+        ranks = pipe.dataplane.process_ranks
+        tracker.bind(ranks if ranks is not None else range(pipe.world))
+        if isinstance(sink, LeaderHistorySink):
+            sink.bind(tracker.is_leader, buffer_standby=True)
     pipe.elastic = dataclasses.replace(
-        pipe.elastic, emitter=emitter,
+        pipe.elastic, emitter=emitter, leader=tracker,
         step_feed=(transport.step_feed
                    if serve and hasattr(transport, "step_feed")
                    else pipe.elastic.step_feed))
@@ -203,11 +249,12 @@ def _wire_heartbeat(pipe, args):
 def _write_plan(args, sig) -> None:
     """Relaunch mode: persist the re-mesh plan for the external launcher.
 
-    Process 0 only (it is the decider and the checkpoint writer, so its
-    (epoch, step) coordinates are the ones that match the durable
-    checkpoint), written atomically so the launcher can never read a torn
-    plan."""
-    if jax.process_index() != 0:
+    The LEADER only (the engine stamps ``sig.leader`` before re-raising:
+    it is the decider and the checkpoint writer, so its (epoch, step)
+    coordinates are the ones that match the durable checkpoint — process 0
+    classically, the succession winner after a leader death), written
+    atomically so the launcher can never read a torn plan."""
+    if not getattr(sig, "leader", jax.process_index() == 0):
         return
     plan = sig.plan
     out = {
@@ -216,6 +263,7 @@ def _write_plan(args, sig) -> None:
         "dropped_workers": list(plan.dropped_workers) if plan else [],
         "readmitted_workers": list(plan.readmitted_workers) if plan else [],
         "mesh_shape": list(plan.mesh_shape) if plan else [],
+        "decided_by": getattr(plan, "decided_by", None) if plan else None,
         "epoch": sig.epoch, "step": sig.step,
     }
     payload = json.dumps(out, indent=1)
@@ -271,8 +319,14 @@ def main() -> None:
                          "worker loss and return")
     ap.add_argument("--heartbeat", default=None,
                     help="real heartbeat transport: file:<shared-dir> "
-                         "(same-host multi-process) or tcp://host:port "
-                         "(process 0 binds it, workers dial in)")
+                         "(same-host multi-process; symmetric — every "
+                         "process polls) or tcp://a:p[,b:p,...] — an "
+                         "ordered FAILOVER list in leader-succession "
+                         "order: process k binds address k and collectors "
+                         "peer-mirror accepted beats, emitters fail over "
+                         "down the list, so the heartbeat decider survives "
+                         "the death of host 0 (list length = succession "
+                         "depth)")
     ap.add_argument("--heartbeat-timeout", type=float, default=60.0)
     ap.add_argument("--elastic-remesh", default="inprocess",
                     choices=["inprocess", "relaunch"],
@@ -345,9 +399,17 @@ def main() -> None:
     # not a RestartSignal.  With --history-out the sink is crash-durable
     # (JSONL, fsynced per row) and idempotent across exit-75 relaunches, so
     # there is nothing to dump on any exit path: the file is always current.
-    sink: list | JsonlHistorySink = \
-        (JsonlHistorySink(args.history_out)
-         if args.history_out and jax.process_index() == 0 else [])
+    # EVERY process carries the leader-gated sink: the current leader's rows
+    # land durably, standbys buffer — so history-writer duty survives the
+    # leader's death.  Buffering starts OFF (without a succession tracker a
+    # non-leader could never flush, so holding every row would be pure
+    # waste); _wire_heartbeat turns it on when it binds a LeaderTracker to
+    # a collector-capable process.
+    sink: list | LeaderHistorySink = \
+        (LeaderHistorySink(args.history_out,
+                           lambda: jax.process_index() == 0,
+                           buffer_standby=False)
+         if args.history_out else [])
     try:
         if arch.family == "stgnn":
             state, history = _train_stgnn(arch, args, adam, sched, loop, sink)
@@ -366,7 +428,7 @@ def main() -> None:
     else:
         print(f"done: nothing to train (resumed past requested epochs), "
               f"wall {wall:.1f}s")
-    if isinstance(sink, JsonlHistorySink):
+    if isinstance(sink, LeaderHistorySink):
         sink.close()
 
 

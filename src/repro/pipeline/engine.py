@@ -42,7 +42,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.distributed import Placement, data_axes, dp_size
 from repro.core.index_dataset import IndexDataset
 from repro.core.windows import WindowSpec
-from repro.distributed import (Checkpointer, HeartbeatMonitor, checkpoint_meta,
+from repro.distributed import (Checkpointer, HeartbeatMonitor,
+                               LeaderCheckpointer, checkpoint_meta,
                                latest_step, plan_remesh, restore,
                                scale_batch_or_steps)
 from repro.launch.mesh import shrink_mesh
@@ -114,6 +115,14 @@ class ElasticConfig:
     # launcher owns any stronger quarantine policy (e.g. exponential rejoin
     # backoff across relaunches); this is the in-process debounce.
     readmit_after_beats: int = 3
+    # Leader succession (repro.distributed.leader.LeaderTracker): when set,
+    # every single-writer duty — checkpoint writes, plan decisions, plan/
+    # history emission — follows `leader.is_leader()` instead of the fixed
+    # `jax.process_index() == 0`, so the death of process 0 hands the
+    # decider role to the lowest surviving rank (whose transport state is
+    # already primed: the file transport is symmetric, the TCP collectors
+    # peer-mirror).  None keeps the classic process-0 gating.
+    leader: Any | None = None
 
 
 @dataclasses.dataclass
@@ -137,6 +146,25 @@ class Engine:
         self._base_mesh = self.dataplane.mesh
         self._base_world = self.dataplane.world
         self._base_global_batch = self.dataplane.global_batch
+        self._checkpointer: Any = None  # fit's writer, kept for succession
+
+    # -------------------------------------------------------------- leadership
+    def is_leader(self) -> bool:
+        """Whether THIS process currently owns the single-writer duties
+        (checkpoints, plan emission, durable history).  With an
+        ``ElasticConfig.leader`` tracker attached the verdict follows the
+        succession rule (lowest live rank wins); without one it is the
+        classic fixed gate, process 0."""
+        el = self.elastic
+        if el is not None and el.leader is not None:
+            return el.leader.is_leader()
+        return jax.process_index() == 0
+
+    def leader_rank(self) -> int:
+        el = self.elastic
+        if el is not None and el.leader is not None:
+            return el.leader.leader()
+        return 0
 
     # ------------------------------------------- legacy Pipeline surface
     @property
@@ -201,7 +229,11 @@ class Engine:
         that survives non-elastic crashes (see ``run_training``).
 
         Under ``jax.distributed``, every process restores from ``ckpt_dir``
-        but only process 0 writes to it — one writer, no torn manifests.
+        but only the LEADER writes to it — one writer, no torn manifests.
+        Without an ``ElasticConfig.leader`` tracker the leader is fixed at
+        process 0 (the historical behavior); with one, every process keeps
+        a warm-standby :class:`LeaderCheckpointer` so checkpoint-writer
+        duty survives the leader's death (``succeed_as_leader``).
         """
         loop = self.config.loop
         if epochs is not None:
@@ -222,9 +254,18 @@ class Engine:
         # the first step (breaking re-fits and sibling pipelines).
         params = jax.tree.map(jnp.copy, self.init_params)
         state = init_train_state(params, self.config.adam)
-        checkpointer = (Checkpointer(loop.ckpt_dir)
-                        if loop.ckpt_dir and jax.process_index() == 0
+        # Every process that could ever become the leader drives a
+        # (leader-gated) checkpointer: the current leader's saves land on
+        # disk, standbys hold warm host snapshots for succession.  Without
+        # a tracker only process 0 can lead, so other processes skip the
+        # snapshot work entirely (the historical single-writer setup).
+        has_tracker = self.elastic is not None and self.elastic.leader is not None
+        checkpointer = (LeaderCheckpointer(Checkpointer(loop.ckpt_dir),
+                                           self.is_leader)
+                        if loop.ckpt_dir
+                        and (has_tracker or jax.process_index() == 0)
                         else None)
+        self._checkpointer = checkpointer
         start_step, start_epoch, start_done = 0, 0, None
         if resume and loop.ckpt_dir and latest_step(loop.ckpt_dir) is not None:
             state, start_step = restore(loop.ckpt_dir, state)
@@ -288,11 +329,13 @@ class Engine:
                 return state, history
             except RestartSignal as sig:
                 history.extend(sig.history)
+                sig.leader = self.is_leader()
                 if self.elastic.remesh == "relaunch":
                     # The external launcher owns re-meshing: run_training
                     # already checkpointed the in-flight state with its
                     # (epoch, done_in_epoch) coordinates, so hand the
-                    # annotated signal (plan + resume coordinates) up.
+                    # annotated signal (plan + resume coordinates +
+                    # whether THIS process is the deciding leader) up.
                     raise
                 if restarts_this_fit >= self.elastic.max_restarts:
                     raise RuntimeError(
@@ -347,6 +390,53 @@ class Engine:
         return combine_weighted(pairs)
 
     # ---------------------------------------------------------------- elastic
+    def succeed_as_leader(self, dead_ranks) -> dict | None:
+        """Post-collective-failure leader succession.
+
+        A peer's death surfaces to the survivors as a failed collective —
+        a plain exception out of :meth:`fit` — and the launcher attributes
+        WHO died through the transport's ``snapshot()`` (whose beats went
+        silent).  It then hands the verdict here: the tracker marks the
+        dead ranks (immediately — the survivor must not wait out a
+        heartbeat timeout to start writing), and if the lowest live rank
+        is now ours, this process takes over every single-writer duty the
+        dead leader held:
+
+        - the warm-standby checkpoint (the exact failure-step state,
+          snapshotted to host before the buffers could be donated or
+          poisoned) is durably written — ``ckpt_step``;
+        - the SHRINK plan is decided by the successor and returned for the
+          launcher to relaunch against.
+
+        Returns ``{"leader", "plan", "ckpt_step"}`` when this process is
+        now the leader, else None.  (History succession is the sink's job:
+        call ``LeaderHistorySink.flush_as_leader()`` alongside this.)
+        """
+        el = self.elastic
+        dead = sorted({int(r) for r in dead_ranks})
+        if el is not None and el.leader is not None:
+            el.leader.note_dead(dead)
+        if not self.is_leader():
+            return None
+        ckpt_step = None
+        if isinstance(self._checkpointer, LeaderCheckpointer):
+            try:
+                self._checkpointer.wait()
+            except Exception:
+                pass  # an earlier async write failing must not block takeover
+            ckpt_step = self._checkpointer.takeover()
+        plan = None
+        if el is not None and dead:
+            try:
+                plan = plan_remesh(self.world, dead,
+                                   model_parallel=el.model_parallel,
+                                   chips_per_host=el.chips_per_host,
+                                   decided_by=self.leader_rank())
+            except RuntimeError:
+                plan = None  # no healthy TP group left: nothing to relaunch
+        return {"leader": self.leader_rank(), "plan": plan,
+                "ckpt_step": ckpt_step}
+
     def _make_monitor(self) -> HeartbeatMonitor | None:
         if self.elastic is None:
             return None
@@ -378,6 +468,11 @@ class Engine:
             beats = (el.step_feed(global_step, world)
                      if el.step_feed is not None
                      else {r: (global_step, None) for r in range(world)})
+            if el.leader is not None:
+                # Leadership derives from the SAME seq-gated beat stream the
+                # monitor consumes — every survivor reaches the same verdict
+                # from the same state, no election round-trips.
+                el.leader.observe(beats)
             for rank, (step, step_time) in beats.items():
                 if rank in monitor.workers:
                     monitor.beat(rank, step, step_time)
@@ -413,9 +508,20 @@ class Engine:
                          if not unhealthy and world < target else [])
             if not unhealthy and not recovered:
                 return
+            # Only the CURRENT leader turns a verdict into a plan.  Every
+            # survivor keeps polling (its monitor/tracker state stays primed
+            # — that is what makes it a viable successor), but a non-leader
+            # acting on the same verdict would race a divergent plan and
+            # checkpoint coordinates against the leader's.  When the leader
+            # itself is what died, the tracker times it out right here and
+            # the successor's NEXT poll passes this gate: a dead rank 0
+            # yields a shrink plan decided by rank 1, not a hung fleet.
+            if not self.is_leader():
+                return
             plan = plan_remesh(world, unhealthy, recovered=recovered,
                                model_parallel=el.model_parallel,
-                               chips_per_host=el.chips_per_host)
+                               chips_per_host=el.chips_per_host,
+                               decided_by=self.leader_rank())
             if plan is not None:
                 raise RestartSignal(plan)
 
@@ -457,6 +563,11 @@ class Engine:
         new_mesh = shrink_mesh(self._base_mesh, new_world)
         self.dataplane = self.dataplane.remesh(
             new_mesh, world=new_world, batch_per_rank=per_new)
+        if el.leader is not None:
+            # Ranks renumber with the topology; in-process re-meshing is
+            # single-host (fit() enforces it), so this process owns every
+            # rank of the new world and stays the leader.
+            el.leader.reset(new_world)
         self.train_step, self._eval_loss = _compile(
             self.dataplane, self.loss_fn, self.config)
         # Restore the failure-step checkpoint into the new topology: params

@@ -46,6 +46,11 @@ class RestartSignal(Exception):
         self.history: list[dict] = []
         self.epoch = 0
         self.step = 0
+        # Set by Engine.fit before re-raising in relaunch mode: whether the
+        # raising process is the current LEADER (the one whose checkpoint
+        # coordinates are durable and who should emit the plan).  True by
+        # default so non-engine raisers keep the old single-process behavior.
+        self.leader = True
 
 
 @dataclasses.dataclass(frozen=True)

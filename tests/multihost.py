@@ -30,8 +30,21 @@ simulation:
   the window-weighted ``val_mae`` rows must come out bit-identical to the
   single-host reference — in every phase, across the kill→shrink→grow cycle;
 - every phase appends to ONE crash-durable ``history.jsonl`` sink
-  (``JsonlHistorySink``): after all three relaunches each step row and each
-  epoch/eval row appears exactly once (idempotent resume).
+  (leader-gated ``LeaderHistorySink`` over ``JsonlHistorySink``): after all
+  three relaunches each step row and each epoch/eval row appears exactly
+  once (idempotent resume);
+- the KILL-RANK-0 cycle (ISSUE 5 tentpole proof) repeats the whole loop
+  with the DECIDER/WRITER as the victim: process 0 — classically the only
+  heartbeat decider, checkpoint writer, plan emitter and history sink —
+  dies mid-epoch.  Rank 1 attributes the death via its own (symmetric)
+  transport snapshot, assumes leadership (lowest live rank,
+  ``repro.distributed.leader``), durably writes its warm-standby
+  checkpoint of the exact failure step (the victim runs ``ckpt_every=0``,
+  so the resume point can ONLY have come from the successor's takeover),
+  decides the shrink plan itself, flushes the buffered history rows, and
+  exits 75 like any other re-mesh; shrink → resume → grow then proceed as
+  before, and the merged losses/val_mae stay bit-identical to the
+  uninterrupted reference (evidence key: ``leader_failover``).
 
 The device-level topology is held constant across phases (2 devices total:
 2 procs × 1 dev, or 1 proc × 2 forced devs) so every phase compiles the
@@ -75,6 +88,26 @@ def _run_worker(args: argparse.Namespace) -> None:
 
     if args.nprocs > 1:
         jax.config.update("jax_cpu_collectives_implementation", "gloo")
+        if args.external_coordinator:
+            # The kill-rank-0 phases host the PJRT coordination service in
+            # the driver's own ``coordinator`` subprocess — the launcher's
+            # fault domain — instead of inside process 0.  With the service
+            # embedded in rank 0, rank 0's death takes the rendezvous
+            # service down with it and every survivor's coordination client
+            # LOG(QFATAL)s ("Terminating process because the JAX
+            # distributed service detected fatal errors") before any
+            # fault-handling code can run: the fleet commits suicide over a
+            # lost coordinator, the exact single-owner failure this PR
+            # removes.  Decoupled, a worker death — ANY worker — degrades
+            # to a failed gloo collective the survivor catches and
+            # attributes.  jax.distributed only hosts the service when
+            # process_id == 0, so stubbing the factory is all it takes for
+            # rank 0 to connect as a plain client like everyone else.
+            import types
+
+            from jax._src.lib import xla_extension
+            xla_extension.get_distributed_runtime_service = \
+                lambda *a, **kw: types.SimpleNamespace(shutdown=lambda: None)
         jax.distributed.initialize(f"127.0.0.1:{args.coordinator_port}",
                                    args.nprocs, args.rank)
 
@@ -83,16 +116,25 @@ def _run_worker(args: argparse.Namespace) -> None:
 
     from repro.core import Placement, WindowSpec
     from repro.data import make_traffic_series
+    from repro.distributed import LeaderHistorySink, LeaderTracker
     from repro.distributed.transport import FileHeartbeatTransport
     from repro.launch.mesh import make_host_mesh
     from repro.optim import AdamConfig
     from repro.pipeline import ElasticConfig, PipelineConfig, build_pipeline
     from repro.train import TrainLoopConfig
-    from repro.train.loop import JsonlHistorySink, RestartSignal
+    from repro.train.loop import RestartSignal
 
     out = args.out
     hb = FileHeartbeatTransport(os.path.join(out, "hb"))
-    is_writer = jax.process_index() == 0
+    # Leader succession (ISSUE 5): the decider/writer is no longer pinned to
+    # process 0 — the lowest LIVE rank owns checkpoint writes, plan emission
+    # and the durable history, so the run survives the death of rank 0 too.
+    tracker = (LeaderTracker(args.world, timeout=args.hb_timeout)
+               if args.elastic else None)
+
+    def is_leader() -> bool:
+        return (tracker.is_leader() if tracker is not None
+                else jax.process_index() == 0)
 
     def loss_fn(p, x, y):
         return jnp.mean((x[:, -1] * p["w"] - y[:, 0]) ** 2), {}
@@ -109,10 +151,15 @@ def _run_worker(args: argparse.Namespace) -> None:
 
     elastic = None
     if args.elastic:
+        # EVERY process polls the (symmetric) file transport — that is what
+        # keeps a potential successor's monitor primed — but only the
+        # current leader acts on a verdict (the engine gates plans on
+        # is_leader()).
         elastic = ElasticConfig(
             heartbeat_timeout=args.hb_timeout,
             emitter=emitter,
-            step_feed=hb.step_feed if is_writer else None,
+            step_feed=hb.step_feed,
+            leader=tracker,
             remesh="relaunch",
             target_world=args.target_world or None)
 
@@ -123,17 +170,21 @@ def _run_worker(args: argparse.Namespace) -> None:
                        placement=Placement.REPLICATED, world=args.world,
                        seed=SEED, adam=AdamConfig(lr=1e-2),
                        loop=TrainLoopConfig(epochs=EPOCHS, log_every=1,
-                                            ckpt_every=1,
+                                            ckpt_every=args.ckpt_every,
                                             ckpt_dir=os.path.join(out, "ck"))),
         elastic=elastic)
     ranks = pipe.dataplane.process_ranks
     owned.extend(ranks if ranks is not None else range(pipe.world))
+    if tracker is not None:
+        tracker.bind(owned)
 
     # ONE durable sink across every phase/relaunch in this run dir: rows are
     # fsynced as they land and duplicate (epoch, step) rows from a resumed
-    # epoch tail are suppressed — the idempotency the driver asserts.
-    sink = (JsonlHistorySink(os.path.join(out, "history.jsonl"))
-            if is_writer else [])
+    # epoch tail are suppressed — the idempotency the driver asserts.  The
+    # sink is leader-gated on every process: the leader's rows go durable
+    # immediately, a standby buffers and only touches the shared file after
+    # a succession takeover (flush_as_leader below).
+    sink = LeaderHistorySink(os.path.join(out, "history.jsonl"), is_leader)
     outcome: dict = {"phase": args.phase, "world": args.world,
                      "nprocs": args.nprocs, "rank": args.rank,
                      "batch_per_rank": args.batch_per_rank,
@@ -150,14 +201,19 @@ def _run_worker(args: argparse.Namespace) -> None:
             "status": "remesh", "kind": plan.kind, "reason": plan.reason,
             "dropped_workers": list(plan.dropped_workers),
             "readmitted_workers": list(plan.readmitted_workers),
+            "decided_by": plan.decided_by,
+            "leader": getattr(sig, "leader", True),
             "epoch": sig.epoch, "step": sig.step,
         })
         code = EXIT_REMESH
     except Exception as e:
-        # A collective died under us: a peer is gone.  The engine already
-        # flushed the in-flight checkpoint; attribute the death through the
-        # transport (whose beats went silent?) and hand the driver a shrink
-        # verdict.
+        # A collective died under us: a peer is gone.  Attribute the death
+        # through the transport (whose beats went silent?), then run leader
+        # SUCCESSION: if the dead peer was the leader, the lowest surviving
+        # rank — us — takes over every writer duty it held (durably writes
+        # the warm-standby checkpoint of the failure step, decides the
+        # shrink plan, flushes the buffered history rows) before handing
+        # the driver the shrink verdict.
         others = [r for r in range(args.world) if r not in owned]
         deadline = time.time() + 4 * args.hb_timeout
         dead: list[int] = []
@@ -167,11 +223,26 @@ def _run_worker(args: argparse.Namespace) -> None:
                     if r not in snap or snap[r]["age"] > args.hb_timeout]
             if not dead:
                 time.sleep(0.15)
+        dead = dead or others
+        succession = pipe.succeed_as_leader(dead)
+        flushed = sink.flush_as_leader()
         outcome.update({"status": "peer-failure",
                         "error": f"{type(e).__name__}: {e}"[:300],
-                        "dead_workers": dead or others})
+                        "dead_workers": dead})
+        if succession is not None:
+            plan = succession["plan"]
+            outcome.update({
+                "leader_rank": succession["leader"],
+                "ckpt_takeover_step": succession["ckpt_step"],
+                "history_rows_flushed": flushed,
+                "kind": plan.kind if plan is not None else None,
+                "reason": plan.reason if plan is not None else None,
+                "decided_by": plan.decided_by if plan is not None else None,
+                "shrink_workers": (list(plan.dropped_workers)
+                                   if plan is not None else []),
+            })
         code = EXIT_REMESH
-    if is_writer:
+    if is_leader():  # evaluated AFTER any succession: the new leader writes
         rows = sink.rows  # what THIS incarnation contributed to the sink
         steps = [h["step"] for h in rows if "epoch_time_s" not in h]
         outcome["steps"] = [min(steps), max(steps)] if steps else []
@@ -188,6 +259,23 @@ def _run_worker(args: argparse.Namespace) -> None:
     # os._exit: after a peer death, jax.distributed's shutdown barrier would
     # abort the process and scramble the exit code the driver relies on.
     os._exit(code)
+
+
+# ================================================================ coordinator
+def _run_coordinator(args: argparse.Namespace) -> None:
+    """Host the PJRT coordination service in its own process (the external
+    launcher's fault domain) so the gang's rendezvous does not share fate
+    with any worker — the topology that makes a rank-0 death survivable.
+    The driver kills us once the phase is over."""
+    from jax._src.lib import xla_extension
+
+    svc = xla_extension.get_distributed_runtime_service(
+        f"[::]:{args.coordinator_port}", args.nprocs)
+    try:
+        while True:
+            time.sleep(1.0)
+    finally:
+        svc.shutdown()
 
 
 # ================================================================== announcer
@@ -242,16 +330,44 @@ def _hb_step(run: str, rank: int) -> int:
         return -1
 
 
+def _ckpt_steps(run: str) -> list[int]:
+    try:
+        return sorted(int(n.split("_")[1])
+                      for n in os.listdir(os.path.join(run, "ck"))
+                      if n.startswith("step_"))
+    except OSError:
+        return []
+
+
+def _merge_evidence(results_dir: str, updates: dict) -> None:
+    """Read-merge-write ``multihost_evidence.json``: the kill-rank-1 and
+    kill-rank-0 tests each contribute their keys without clobbering the
+    other's (CI asserts fields from both before uploading the artifact)."""
+    path = os.path.join(results_dir, "multihost_evidence.json")
+    evidence: dict = {}
+    try:
+        evidence = _read_json(path)
+    except (OSError, ValueError):
+        pass
+    evidence.update(updates)
+    with open(path, "w") as f:
+        json.dump(evidence, f, indent=1)
+
+
 def _worker_argv(*, phase: str, out: str, rank: int = 0, nprocs: int = 1,
                  world: int, batch_per_rank: int, port: int = 0,
                  elastic: bool = True, die_at: int = 0,
-                 target_world: int = 0) -> list:
+                 target_world: int = 0, ckpt_every: int = 1,
+                 external_coordinator: bool = False) -> list:
     argv = ["worker", "--phase", phase, "--out", out, "--rank", rank,
             "--nprocs", nprocs, "--coordinator-port", port,
             "--world", world, "--batch-per-rank", batch_per_rank,
-            "--hb-timeout", HB_TIMEOUT, "--step-delay", STEP_DELAY]
+            "--hb-timeout", HB_TIMEOUT, "--step-delay", STEP_DELAY,
+            "--ckpt-every", ckpt_every]
     if elastic:
         argv.append("--elastic")
+    if external_coordinator:
+        argv.append("--external-coordinator")
     if die_at:
         argv += ["--die-at-step", die_at]
     if target_world:
@@ -375,7 +491,7 @@ def test_elastic_grow_and_resume_on_real_processes(tmp_path, free_port,
     assert _losses(durable) == ref_losses
     assert _evals(durable) == ref_evals
 
-    evidence = {
+    _merge_evidence(results_dir, {
         "fleet": FLEET, "global_batch": GLOBAL_BATCH,
         "total_steps": total_steps, "killed_at_step": DIE_AT_STEP,
         "grow_at_step": grow_step,
@@ -384,9 +500,153 @@ def test_elastic_grow_and_resume_on_real_processes(tmp_path, free_port,
         "eval_bit_identical_to_reference": merged_evals == ref_evals,
         "val_mae_per_epoch": ref_evals,
         "durable_history_idempotent": len(d_steps) == len(set(d_steps)),
-    }
-    with open(os.path.join(results_dir, "multihost_evidence.json"), "w") as f:
-        json.dump(evidence, f, indent=1)
+    })
+
+
+def test_kill_rank0_leader_succession(tmp_path, free_port, mh_spawn,
+                                      results_dir):
+    """Survive the death of RANK 0 — until this PR the single heartbeat
+    decider, checkpoint writer, plan emitter and history sink, whose loss
+    therefore killed the whole run.  Process 0 dies mid-epoch; rank 1
+    attributes the death via its own transport snapshot, assumes leadership
+    (lowest live rank), durably writes the warm-standby checkpoint of the
+    exact failure step, decides the shrink plan and flushes the durable
+    history — then the usual shrink → resume → grow cycle runs and the
+    merged losses/val_mae come out bit-identical to the uninterrupted
+    reference.  The victim runs with ``ckpt_every=0`` (no periodic saves),
+    so the resume checkpoint can ONLY have been written by the successor:
+    the takeover is load-bearing, not a shadow of rank 0's writes."""
+    ref = str(tmp_path / "ref")
+    run = str(tmp_path / "run")
+    os.makedirs(ref)
+    os.makedirs(run)
+
+    # ---- reference: uninterrupted single-host run, same 2-device program
+    p = mh_spawn(_worker_argv(phase="ref", out=ref, world=FLEET,
+                              batch_per_rank=GLOBAL_BATCH // FLEET,
+                              elastic=False),
+                 devices=2, log=os.path.join(ref, "ref.log"))
+    assert _wait(p, timeout=240, what="reference run") == 0
+    ref_hist = _read_json(os.path.join(ref, "history_ref.json"))
+    ref_losses = _losses(ref_hist)
+    ref_evals = _evals(ref_hist)
+    total_steps = max(ref_losses)
+
+    # ---- phase KA: the 2-process gang; RANK 0 — the leader — dies.  It
+    #      writes no periodic checkpoints (ckpt_every=0), so the only
+    #      durable step state can come from rank 1's succession takeover.
+    #      The coordination service runs in the driver's own subprocess
+    #      (the launcher's fault domain): embedded in rank 0 it would die
+    #      with it and the PJRT client would QFATAL every survivor before
+    #      succession could run.
+    port = free_port()
+    coord = mh_spawn(["coordinator", "--out", run, "--nprocs", FLEET,
+                      "--coordinator-port", port],
+                     log=os.path.join(run, "coord_ka.log"))
+    argv = dict(out=run, nprocs=FLEET, world=FLEET,
+                batch_per_rank=GLOBAL_BATCH // FLEET, port=port,
+                target_world=FLEET, external_coordinator=True)
+    p0 = mh_spawn(_worker_argv(phase="ka", rank=0, die_at=DIE_AT_STEP,
+                               ckpt_every=0, **argv),
+                  devices=1, log=os.path.join(run, "ka0.log"))
+    p1 = mh_spawn(_worker_argv(phase="ka", rank=1, **argv),
+                  devices=1, log=os.path.join(run, "ka1.log"))
+    assert _wait(p0, timeout=240, what="phase KA victim (rank 0)") == EXIT_KILLED
+    assert _wait(p1, timeout=240, what="phase KA successor (rank 1)") == EXIT_REMESH
+    coord.kill()
+    # the outcome file exists at all because rank 1 took over writer duty
+    out_a = _read_json(os.path.join(run, "outcome_ka.json"))
+    assert out_a["rank"] == 1 and out_a["status"] == "peer-failure"
+    assert out_a["dead_workers"] == [0]
+    # succession: rank 1 is the leader and DECIDED the shrink itself
+    assert out_a["leader_rank"] == 1
+    assert out_a["kind"] == "shrink" and out_a["decided_by"] == 1
+    assert out_a["shrink_workers"] == [0]
+    # checkpoint-writer succession: the takeover wrote the failure step,
+    # and it is the ONLY durable checkpoint in the run dir
+    assert out_a["ckpt_takeover_step"] == DIE_AT_STEP
+    assert _ckpt_steps(run) == [DIE_AT_STEP]
+    hist_a = _read_json(os.path.join(run, "history_ka.json"))
+    losses_a = _losses(hist_a)
+    assert max(losses_a) == DIE_AT_STEP
+
+    # ---- phase KB: the survivor relaunches alone and resumes from the
+    #      successor-written checkpoint — no step lost, none repeated.
+    pb = mh_spawn(_worker_argv(phase="kb", out=run, world=1,
+                               batch_per_rank=GLOBAL_BATCH,
+                               target_world=FLEET),
+                  devices=2, log=os.path.join(run, "kb.log"))
+    deadline = time.time() + 120
+    while _hb_step(run, 0) < DIE_AT_STEP + 3:
+        assert time.time() < deadline, "phase KB never advanced past resume"
+        assert pb.poll() is None, "phase KB exited before the worker returned"
+        time.sleep(0.1)
+    ann = mh_spawn(["announce", "--out", run, "--rank", 1])
+    assert _wait(pb, timeout=240, what="phase KB trainer") == EXIT_REMESH
+    ann.kill()
+    out_b = _read_json(os.path.join(run, "outcome_kb.json"))
+    assert out_b["status"] == "remesh" and out_b["kind"] == "grow"
+    assert out_b["readmitted_workers"] == [1]
+    losses_b = _losses(_read_json(os.path.join(run, "history_kb.json")))
+    assert min(losses_b) == DIE_AT_STEP + 1
+    grow_step = out_b["step"]
+
+    # ---- phase KC: the full gang again finishes the run (same decoupled
+    #      coordination-service topology, fresh service for the new gang)
+    port_c = free_port()
+    coord_c = mh_spawn(["coordinator", "--out", run, "--nprocs", FLEET,
+                        "--coordinator-port", port_c],
+                       log=os.path.join(run, "coord_kc.log"))
+    argv_c = dict(out=run, nprocs=FLEET, world=FLEET,
+                  batch_per_rank=GLOBAL_BATCH // FLEET, port=port_c,
+                  target_world=FLEET, external_coordinator=True)
+    c0 = mh_spawn(_worker_argv(phase="kc", rank=0, **argv_c),
+                  devices=1, log=os.path.join(run, "kc0.log"))
+    c1 = mh_spawn(_worker_argv(phase="kc", rank=1, **argv_c),
+                  devices=1, log=os.path.join(run, "kc1.log"))
+    assert _wait(c0, timeout=240, what="phase KC rank 0") == 0
+    assert _wait(c1, timeout=240, what="phase KC rank 1") == 0
+    coord_c.kill()
+    out_c = _read_json(os.path.join(run, "outcome_kc.json"))
+    assert out_c["status"] == "done"
+    losses_c = _losses(_read_json(os.path.join(run, "history_kc.json")))
+    assert min(losses_c) == grow_step + 1 and max(losses_c) == total_steps
+
+    # ---- headline: losing the DECIDER costs nothing — merged losses and
+    #      eval rows are bit-identical to the uninterrupted reference
+    merged = {**losses_a, **losses_b, **losses_c}
+    assert sorted(merged) == list(range(1, total_steps + 1))
+    assert merged == ref_losses
+    merged_evals = {**_evals(hist_a),
+                    **_evals(_read_json(os.path.join(run, "history_kb.json"))),
+                    **_evals(_read_json(os.path.join(run, "history_kc.json")))}
+    assert set(ref_evals) == {0, 1}
+    assert merged_evals == ref_evals
+
+    # ---- the ONE durable history.jsonl spans the leader handover too:
+    #      rank 0's pre-death rows + the successor's flush + both relaunches
+    #      land every row exactly once, equal to the reference.
+    durable = _read_jsonl(os.path.join(run, "history.jsonl"))
+    d_steps = [h["step"] for h in durable if "epoch_time_s" not in h]
+    assert sorted(d_steps) == list(range(1, total_steps + 1))
+    assert _losses(durable) == ref_losses
+    assert _evals(durable) == ref_evals
+
+    _merge_evidence(results_dir, {
+        "eval_bit_identical_to_reference": merged_evals == ref_evals,
+        "leader_failover": {
+            "killed_rank": 0, "killed_at_step": DIE_AT_STEP,
+            "successor": out_a["leader_rank"],
+            "attributed_dead": out_a["dead_workers"],
+            "shrink_decided_by": out_a["decided_by"],
+            "ckpt_takeover_step": out_a["ckpt_takeover_step"],
+            "history_rows_flushed": out_a.get("history_rows_flushed"),
+            "grow_at_step": grow_step,
+            "phases": [out_a, out_b, out_c],
+            "bit_identical_to_reference": merged == ref_losses,
+            "eval_bit_identical_to_reference": merged_evals == ref_evals,
+        },
+    })
 
 
 def test_two_process_feed_assembly_matches_single_host(tmp_path, free_port,
@@ -433,7 +693,7 @@ def test_two_process_feed_assembly_matches_single_host(tmp_path, free_port,
 # ====================================================================== main
 def _main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("role", choices=["worker", "announce"])
+    ap.add_argument("role", choices=["worker", "announce", "coordinator"])
     ap.add_argument("--phase", default="run")
     ap.add_argument("--out", required=True)
     ap.add_argument("--rank", type=int, default=0)
@@ -447,9 +707,20 @@ def _main() -> None:
     ap.add_argument("--target-world", type=int, default=0)
     ap.add_argument("--hb-timeout", type=float, default=HB_TIMEOUT)
     ap.add_argument("--step-delay", type=float, default=STEP_DELAY)
+    ap.add_argument("--ckpt-every", type=int, default=1,
+                    help="step-checkpoint cadence; 0 disables periodic "
+                         "saves (the kill-rank-0 phase runs its victim "
+                         "with 0 so the resume point can ONLY come from "
+                         "the successor's takeover checkpoint)")
+    ap.add_argument("--external-coordinator", action="store_true",
+                    help="the PJRT coordination service is hosted by the "
+                         "driver's coordinator subprocess, not process 0 "
+                         "(required for a survivable rank-0 death)")
     args = ap.parse_args()
     if args.role == "announce":
         _run_announcer(args)
+    elif args.role == "coordinator":
+        _run_coordinator(args)
     else:
         _run_worker(args)
 

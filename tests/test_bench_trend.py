@@ -1,0 +1,110 @@
+"""The perf-trend comparator (``benchmarks/trend.py``) on hand-built pairs:
+direction-aware regressions, percentage-POINT semantics for the table3
+overhead (whose baseline can be negative — a relative ratio would be
+garbage), missing-field tolerance, and the CLI's exit-code contract."""
+import json
+
+import pytest
+
+from benchmarks.trend import HEADLINE_FIELDS, compare_headlines
+
+
+BASE = {
+    "tokens_per_s": 1_000_000.0,
+    "gather_dense_us": 3000.0,
+    "gather_pallas_interpret_us": 4500.0,
+    "step_overhead_vs_base_pct": -4.0,
+    "peak_rss_bytes": 450_000_000,
+}
+
+
+def _verdicts(prev, cur, **kw):
+    return {r["field"]: r["verdict"] for r in compare_headlines(prev, cur, **kw)}
+
+
+def test_identical_points_all_ok():
+    assert set(_verdicts(BASE, BASE).values()) == {"ok"}
+
+
+def test_improvements_never_flag():
+    cur = dict(BASE, tokens_per_s=2_000_000.0, gather_dense_us=1500.0,
+               step_overhead_vs_base_pct=-8.0, peak_rss_bytes=300_000_000)
+    v = _verdicts(BASE, cur)
+    assert set(v.values()) == {"ok"}
+    regs = {r["field"]: r["regression"] for r in compare_headlines(BASE, cur)}
+    assert regs["tokens_per_s"] < 0  # improvements are NEGATIVE regressions
+
+
+def test_direction_awareness():
+    """tokens/s is higher-better, the rest lower-better: the same 30% move
+    flags on the correct side of each."""
+    v = _verdicts(BASE, dict(BASE, tokens_per_s=700_000.0))
+    assert v["tokens_per_s"] == "fail"
+    v = _verdicts(BASE, dict(BASE, gather_dense_us=3000.0 * 1.3))
+    assert v["gather_dense_us"] == "fail"
+    # the same magnitude in the GOOD direction is ok
+    v = _verdicts(BASE, dict(BASE, gather_dense_us=3000.0 * 0.7))
+    assert v["gather_dense_us"] == "ok"
+
+
+def test_warn_band_between_10_and_25_pct():
+    v = _verdicts(BASE, dict(BASE, tokens_per_s=1_000_000.0 * 0.85))  # -15%
+    assert v["tokens_per_s"] == "warn"
+    v = _verdicts(BASE, dict(BASE, peak_rss_bytes=450_000_000 * 1.12))
+    assert v["peak_rss_bytes"] == "warn"
+    # thresholds are configurable
+    v = _verdicts(BASE, dict(BASE, tokens_per_s=1_000_000.0 * 0.85),
+                  warn=0.20, fail=0.5)
+    assert v["tokens_per_s"] == "ok"
+
+
+def test_overhead_pct_compares_in_points_not_ratio():
+    """-4% -> +8% overhead is a 12-POINT slide (warn), not a -300% ratio;
+    -4% -> +30% is 34 points (fail).  A ratio against the negative baseline
+    would invert the sign and read the regression as an improvement."""
+    v = _verdicts(BASE, dict(BASE, step_overhead_vs_base_pct=8.0))
+    assert v["step_overhead_vs_base_pct"] == "warn"
+    v = _verdicts(BASE, dict(BASE, step_overhead_vs_base_pct=30.0))
+    assert v["step_overhead_vs_base_pct"] == "fail"
+    v = _verdicts(BASE, dict(BASE, step_overhead_vs_base_pct=-2.0))
+    assert v["step_overhead_vs_base_pct"] == "ok"
+
+
+def test_missing_and_nonpositive_fields_never_fail():
+    prev = dict(BASE)
+    del prev["gather_pallas_interpret_us"]          # schema drift: old point
+    prev["tokens_per_s"] = 0.0                      # broken old record
+    v = _verdicts(prev, BASE)
+    assert v["gather_pallas_interpret_us"] == "missing"
+    assert v["tokens_per_s"] == "missing"
+    assert all(verdict != "fail" for verdict in v.values())
+
+
+def test_every_headline_field_is_covered():
+    assert set(HEADLINE_FIELDS) == set(BASE)
+    assert len(compare_headlines(BASE, BASE)) == len(BASE)
+
+
+# --------------------------------------------------------------- CLI contract
+def _write(path, headline):
+    with open(path, "w") as f:
+        json.dump({"schema": 1, "headline": headline}, f)
+    return str(path)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    from benchmarks.trend import main
+
+    prev = _write(tmp_path / "prev.json", BASE)
+    ok = _write(tmp_path / "ok.json", dict(BASE, tokens_per_s=990_000.0))
+    bad = _write(tmp_path / "bad.json", dict(BASE, tokens_per_s=500_000.0))
+
+    main(["--prev", prev, "--cur", ok])             # no regression: returns
+    assert "ok" in capsys.readouterr().out
+    with pytest.raises(SystemExit) as e:
+        main(["--prev", prev, "--cur", bad])        # -50% tokens/s: fails
+    assert e.value.code == 1
+    assert "::error::" in capsys.readouterr().out
+
+    with pytest.raises(SystemExit):                 # not a bench record
+        main(["--prev", _write(tmp_path / "junk.json", None), "--cur", ok])

@@ -1,5 +1,6 @@
 """Distributed substrate: checkpoint atomicity/elastic restore, heartbeat and
-re-mesh policy, gradient equivalence of the DP step, placement helpers."""
+re-mesh policy (including the shrink/grow round-trip property), gradient
+equivalence of the DP step, placement helpers."""
 import os
 import threading
 
@@ -7,6 +8,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core import WindowSpec
 from repro.core.distributed import (Placement, local_time_range, local_window_ids,
@@ -150,6 +153,88 @@ def test_scale_batch_rules():
     assert per * 12 >= 1024  # keep-global rounds up
     per2, glob2 = scale_batch_or_steps(1024, 16, 12, keep_global_batch=False)
     assert per2 == 64 and glob2 == 768
+
+
+# -------------------------------------------- shrink/grow round-trip property
+@settings(max_examples=80, deadline=None)
+@given(base_world=st.integers(2, 8),
+       batch_per_rank=st.integers(1, 8),
+       events=st.lists(st.integers(0, 999), min_size=1, max_size=12))
+def test_plan_roundtrip_restores_base_topology(base_world, batch_per_rank,
+                                               events):
+    """Arbitrary shrink/grow sequences through ``plan_remesh`` +
+    ``scale_batch_or_steps`` (the engine's contract: ALWAYS re-scale
+    against the BASE global batch) restore the BASE topology and global
+    batch exactly once every worker has returned — and never compound the
+    ceil inflation mid-sequence.  The victim of each shrink is drawn from
+    the whole world INCLUDING rank 0 (the leader): the planner is
+    rank-agnostic, succession (lowest surviving rank decides) is always
+    well-defined, and a sequence that kills every leader in turn still
+    round-trips."""
+    base_global = base_world * batch_per_rank
+    world = base_world
+    for ev in events:
+        shrink = (ev % 2 == 0 and world > 1) or world == base_world
+        if shrink:
+            victim = ev % world                   # may be 0 — the leader
+            successor = 0 if victim else (1 if world > 1 else 0)
+            plan = plan_remesh(world, [victim], model_parallel=1,
+                               chips_per_host=1, decided_by=successor)
+            assert plan.kind == "shrink"
+            assert plan.dropped_workers == (victim,)
+            assert plan.decided_by == successor   # rank 0's death included
+            world -= 1
+        else:
+            back = 1 + ev % (base_world - world)  # grow by 1..missing
+            plan = plan_remesh(world, [],
+                               recovered=list(range(world, world + back)),
+                               model_parallel=1, chips_per_host=1)
+            assert plan.kind == "grow"
+            assert len(plan.readmitted_workers) == back
+            world += back
+        # the engine's invariant: per-worker batch is ceil(BASE/world) at
+        # every intermediate topology — scaling from the base never
+        # compounds (feeding the inflated global back in WOULD)
+        per, glob = scale_batch_or_steps(base_global, old_dp=base_world,
+                                         new_dp=world)
+        assert per == -(-base_global // world)
+        assert glob == per * world
+        assert glob >= base_global                # never loses windows
+        assert glob - base_global < world         # inflation bounded < world
+    # every worker returns: the inverse plans restore the base exactly
+    while world < base_world:
+        plan = plan_remesh(world, [],
+                           recovered=list(range(world, base_world)),
+                           model_parallel=1, chips_per_host=1)
+        world += len(plan.readmitted_workers)
+    per, glob = scale_batch_or_steps(base_global, old_dp=base_world,
+                                     new_dp=world)
+    assert world == base_world
+    assert (per, glob) == (batch_per_rank, base_global)
+
+
+@settings(max_examples=40, deadline=None)
+@given(base_world=st.integers(2, 6), shrinks=st.integers(1, 4),
+       batch_per_rank=st.integers(1, 5))
+def test_compounding_ceil_inflation_is_real_and_avoided(base_world, shrinks,
+                                                        batch_per_rank):
+    """The failure mode the BASE-scaling contract exists to prevent: chain
+    the scaling through each re-mesh's inflated output and the global batch
+    is non-decreasing (and on non-dividing worlds grows); scale from the
+    base and the round trip is exact."""
+    base_global = base_world * batch_per_rank
+    n = min(shrinks, base_world - 1)
+    # the WRONG way: feed each inflated global back in
+    chained = base_global
+    for w in range(base_world - 1, base_world - 1 - n, -1):
+        chained = scale_batch_or_steps(chained, old_dp=w + 1, new_dp=w)[1]
+    for w in range(base_world - n + 1, base_world + 1):
+        chained = scale_batch_or_steps(chained, old_dp=w - 1, new_dp=w)[1]
+    assert chained >= base_global
+    # the engine's way: always from the base — exact after the round trip
+    assert scale_batch_or_steps(base_global, old_dp=base_world,
+                                new_dp=base_world) == (batch_per_rank,
+                                                       base_global)
 
 
 # ------------------------------------------------------------------ placements

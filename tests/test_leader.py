@@ -1,0 +1,322 @@
+"""Leader succession (``repro.distributed.leader``): the lowest live rank
+owns the single-writer duties, and every duty survives the leader's death —
+
+- :class:`LeaderTracker`: deterministic lowest-live-rank rule over the same
+  seq-gated beat stream the monitor consumes; timeout-based and immediate
+  (``note_dead``) succession; startup grace (never-beaten ranks are timed
+  from the first observe, not construction);
+- :class:`LeaderCheckpointer`: standbys hold warm host snapshots, the
+  leader writes; ``takeover()`` durably lands the exact failure-step state;
+- :class:`LeaderHistorySink`: standby rows buffer without touching the
+  shared file; a takeover flush lands only the rows the dead leader never
+  wrote (first-wins dedup);
+- the ENGINE-level chain, single-host fault injection: the process owning
+  ranks 1..3 watches rank 0 — the leader — go silent, times it out, takes
+  the decider role, and the SHRINK plan that re-meshes the run is decided
+  by rank 1 (``plan.decided_by``), not by a hung fleet.  The same chain
+  over real processes is ``tests/multihost.py``'s kill-rank-0 cycle.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Placement, WindowSpec
+from repro.data import make_traffic_series
+from repro.distributed import (Checkpointer, LeaderCheckpointer,
+                               LeaderHistorySink, LeaderTracker, latest_step,
+                               restore)
+from repro.launch.mesh import make_host_mesh
+from repro.optim import AdamConfig
+from repro.pipeline import ElasticConfig, PipelineConfig, build_pipeline
+from repro.train import TrainLoopConfig
+
+
+# --------------------------------------------------------------- LeaderTracker
+def test_lowest_live_rank_wins():
+    clock = [0.0]
+    t = LeaderTracker(4, [2, 3], timeout=5.0, clock=lambda: clock[0])
+    t.observe({r: (1, None) for r in range(4)})
+    assert t.leader() == 0 and not t.is_leader()
+    clock[0] += 2.0
+    t.observe({2: (2, None), 3: (2, None)})  # ranks 0/1 keep silent
+    clock[0] += 4.0                          # 0 and 1 now 6 s stale
+    assert t.live() == [2, 3]
+    assert t.leader() == 2 and t.is_leader()
+
+
+def test_never_beaten_ranks_get_startup_grace():
+    """A rank that has not beaten yet is timed from the FIRST observe —
+    construction-to-first-poll time (gloo init, jit compile) must not flip
+    leadership away from a healthy rank 0."""
+    clock = [100.0]
+    t = LeaderTracker(2, [1], timeout=5.0, clock=lambda: clock[0])
+    assert t.leader() == 0          # nothing observed at all: all live
+    t.observe({1: (1, None)})       # first poll starts rank 0's clock
+    clock[0] += 4.0
+    assert t.leader() == 0          # within the grace window
+    clock[0] += 2.0                 # 6 s since first observe: timed out
+    t.observe({1: (2, None)})
+    assert t.leader() == 1 and t.is_leader()
+
+
+def test_note_dead_is_immediate_and_beats_heal():
+    clock = [0.0]
+    t = LeaderTracker(3, [1], timeout=1e9, clock=lambda: clock[0])
+    t.observe({r: (1, None) for r in range(3)})
+    t.note_dead([0])                # attribution: no timeout needed
+    assert t.leader() == 1 and t.is_leader()
+    t.observe({0: (5, None)})       # a fresh beat overrides the verdict
+    assert t.leader() == 0 and not t.is_leader()
+
+
+def test_last_survivor_leads_and_out_of_world_ignored():
+    clock = [0.0]
+    t = LeaderTracker(2, [1], timeout=1e9, clock=lambda: clock[0])
+    t.note_dead([0])
+    t.observe({7: (3, None)})       # a returned worker announcing: not in
+    assert t.live() == [1]          # the current world, not in the vote
+    assert t.is_leader()
+    t.note_dead([1])                # everyone attributed dead — including us:
+    assert t.leader() == 1          # someone must still write the post-mortem
+    assert t.is_leader()
+
+
+def test_reset_reprimes_for_new_topology():
+    clock = [0.0]
+    t = LeaderTracker(4, [1], timeout=5.0, clock=lambda: clock[0])
+    t.note_dead([0])
+    assert t.is_leader()
+    t.reset(3)                      # in-process re-mesh: we own every rank
+    assert t.world == 3 and t.own_ranks == {0, 1, 2}
+    assert t.leader() == 0 and t.is_leader()
+
+
+# ---------------------------------------------------------- LeaderCheckpointer
+def _tiny_state():
+    return {"w": jnp.arange(6.0).reshape(2, 3)}
+
+
+def test_standby_holds_snapshot_takeover_writes(tmp_path):
+    lead = [False]
+    ck = LeaderCheckpointer(Checkpointer(str(tmp_path)), lambda: lead[0])
+    ck.save(_tiny_state(), step=4, meta={"epoch": 0, "done_in_epoch": 4})
+    assert latest_step(str(tmp_path)) is None   # standby: nothing durable
+    assert ck.pending_step == 4
+    lead[0] = True
+    assert ck.takeover() == 4
+    state, step = restore(str(tmp_path), _tiny_state())
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(state["w"]),
+                                  np.arange(6.0).reshape(2, 3))
+    from repro.distributed import checkpoint_meta
+    assert checkpoint_meta(str(tmp_path)) == {"epoch": 0, "done_in_epoch": 4}
+    assert ck.takeover() is None                # nothing pending twice
+
+
+def test_leader_saves_land_directly_and_clear_pending(tmp_path):
+    ck = LeaderCheckpointer(Checkpointer(str(tmp_path)), lambda: True)
+    ck.save(_tiny_state(), step=1)
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 1
+    assert ck.pending_step is None and ck.takeover() is None
+
+
+def test_standby_snapshot_survives_mutated_source(tmp_path):
+    """The standby copy is HOST bytes, not a reference: mutating (or, in
+    real life, donating/poisoning) the source arrays after save must not
+    change what a takeover writes."""
+    lead = [False]
+    ck = LeaderCheckpointer(Checkpointer(str(tmp_path)), lambda: lead[0])
+    state = {"w": np.arange(4.0)}
+    ck.save(state, step=2)
+    state["w"][:] = -1.0
+    lead[0] = True
+    ck.takeover()
+    restored, _ = restore(str(tmp_path), {"w": np.zeros(4)})
+    np.testing.assert_array_equal(restored["w"], np.arange(4.0))
+
+
+# ----------------------------------------------------------- LeaderHistorySink
+def test_standby_buffers_takeover_flushes_dedup(tmp_path):
+    path = str(tmp_path / "h.jsonl")
+    # the leader lands two rows, then "dies"
+    dead = LeaderHistorySink(path, lambda: True)
+    dead.append({"step": 1, "epoch": 0, "loss": 1.0})
+    dead.append({"step": 2, "epoch": 0, "loss": 0.9})
+    dead.close()
+    # the standby logged the same rows plus one more the leader never wrote
+    lead = [False]
+    succ = LeaderHistorySink(path, lambda: lead[0])
+    for row in ({"step": 1, "epoch": 0, "loss": 1.0},
+                {"step": 2, "epoch": 0, "loss": 0.9},
+                {"step": 3, "epoch": 0, "loss": 0.8}):
+        succ.append(row)
+    assert len(open(path).readlines()) == 2     # standby never touched it
+    assert [r["step"] for r in succ.rows] == [1, 2, 3]
+    lead[0] = True
+    assert succ.flush_as_leader() == 1          # only step 3 was new
+    assert [r["step"] for r in succ.load()] == [1, 2, 3]
+    # post-takeover appends go straight to the durable file
+    succ.append({"step": 4, "epoch": 0, "loss": 0.7})
+    assert [r["step"] for r in succ.load()] == [1, 2, 3, 4]
+    succ.close()
+
+
+def test_buffer_standby_off_keeps_no_unflushable_copy(tmp_path):
+    """Processes that can never lead (no tracker / beyond the failover
+    list) must not accumulate an unflushable buffer for the whole run."""
+    s = LeaderHistorySink(str(tmp_path / "h.jsonl"), lambda: False,
+                          buffer_standby=False)
+    for i in range(5):
+        s.append({"step": i, "epoch": 0, "loss": 1.0})
+    assert s._buffer == [] and len(s.rows) == 5
+    s.bind(lambda: True)
+    assert s.flush_as_leader() == 0      # nothing held, nothing to land
+    s.close()
+
+
+def test_takeover_truncates_dead_leaders_torn_tail(tmp_path):
+    """The durable sink is opened lazily — ON takeover — so the torn row a
+    leader died mid-write in is truncated exactly when the successor first
+    touches the file, then re-landed from its buffer."""
+    path = str(tmp_path / "h.jsonl")
+    with open(path, "w") as f:
+        f.write('{"step": 1, "epoch": 0, "loss": 1.0}\n')
+        f.write('{"step": 2, "epoch": 0, "lo')       # died mid-write
+    succ = LeaderHistorySink(path, lambda: False)
+    succ.append({"step": 2, "epoch": 0, "loss": 0.9})
+    succ.bind(lambda: True)
+    assert succ.flush_as_leader() == 1
+    rows = succ.load()
+    assert [(r["step"], r["loss"]) for r in rows] == [(1, 1.0), (2, 0.9)]
+    succ.close()
+
+
+# ------------------------------------------- engine chain: the leader dies
+ENTRIES, NODES, WORLD, B = 120, 3, 4, 2
+SPEC = WindowSpec(horizon=2, input_len=2)
+
+
+def _loss_fn(p, x, y):
+    return jnp.mean((x[:, -1] * p["w"] - y[:, 0]) ** 2), {}
+
+
+class LeaderDies:
+    """step_feed fake: rank 0 — the decider — stops beating at step 3 while
+    the fake clock flies past the timeout.  Every OTHER rank keeps beating;
+    the pretend-process owning ranks 1..3 must take over and shrink."""
+
+    def __init__(self, clock, dead_after: int = 3):
+        self.clock = clock
+        self.dead_after = dead_after
+
+    def __call__(self, step: int, world: int) -> dict:
+        self.clock[0] += 1.0
+        beats = {r: (step, None) for r in range(world)}
+        if world == WORLD and step >= self.dead_after:
+            del beats[0]
+            self.clock[0] += 100.0
+        return beats
+
+
+def test_dead_rank0_shrink_decided_by_successor(tmp_path):
+    """A dead rank 0 yields a SHRINK plan decided by the successor, not a
+    hung fleet: with leadership threaded through the health callback, the
+    tracker times the old leader out on the same poll the monitor flags it,
+    rank 1 passes the is-leader gate, and the plan it raises re-meshes the
+    run to completion.  (The checkpoint restored into the shrunk mesh was
+    written by the SUCCESSOR — its standby saves were the only ones this
+    pretend-process could make durable.)"""
+    clock = [0.0]
+    tracker = LeaderTracker(WORLD, [1, 2, 3], timeout=50.0,
+                            clock=lambda: clock[0])
+    elastic = ElasticConfig(heartbeat_timeout=50.0, clock=lambda: clock[0],
+                            step_feed=LeaderDies(clock), leader=tracker)
+    pipe = build_pipeline(
+        make_traffic_series(ENTRIES, NODES), SPEC, make_host_mesh(),
+        _loss_fn, {"w": jnp.full((NODES, 2), 0.1, jnp.float32)},
+        PipelineConfig(batch_per_rank=B, placement=Placement.REPLICATED,
+                       world=WORLD, seed=7, adam=AdamConfig(lr=1e-2),
+                       loop=TrainLoopConfig(epochs=2, log_every=1,
+                                            ckpt_dir=str(tmp_path / "ck"))),
+        elastic=elastic)
+    assert not pipe.is_leader()  # rank 0 leads while it lives
+    _, history = pipe.fit(eval_fn=None)
+
+    assert len(pipe.restarts) == 1
+    plan = pipe.restarts[0]["plan"]
+    assert plan.kind == "shrink"
+    assert plan.dropped_workers == (0,)          # the LEADER was the victim
+    assert plan.decided_by == 1                  # ...and rank 1 decided
+    assert pipe.world == WORLD - 1
+    # after the in-process re-mesh this process owns the whole (renumbered)
+    # world and leads it
+    assert pipe.is_leader() and tracker.own_ranks == {0, 1, 2}
+    # the run finished: both epochs summarised, steps monotonic, no dups
+    steps = [h["step"] for h in history if "epoch_time_s" not in h]
+    assert steps == sorted(steps) and len(steps) == len(set(steps))
+    assert [h["epoch"] for h in history if "epoch_time_s" in h] == [0, 1]
+
+
+def test_succeed_as_leader_takes_over_checkpoint_and_plan(tmp_path):
+    """The post-collective-failure path, single-host: the run dies with a
+    plain exception (a peer vanished mid-step), the launcher attributes
+    rank 0, and ``succeed_as_leader`` must (a) flip leadership, (b) durably
+    write the successor's warm-standby checkpoint — the ONLY durable state,
+    since the pretend-rank-1 process was never the writer — and (c) return
+    the shrink plan the successor decided."""
+    clock = [0.0]
+    tracker = LeaderTracker(2, [1], timeout=50.0, clock=lambda: clock[0])
+    boom = RuntimeError("Gloo all-reduce failed: connection closed by peer")
+
+    def step_feed(step: int, world: int) -> dict:
+        clock[0] += 1.0
+        if step >= 3:
+            raise boom  # the collective dies under us mid-epoch
+        return {r: (step, None) for r in range(world)}
+
+    elastic = ElasticConfig(heartbeat_timeout=50.0, clock=lambda: clock[0],
+                            step_feed=step_feed, leader=tracker,
+                            remesh="relaunch")
+    pipe = build_pipeline(
+        make_traffic_series(ENTRIES, NODES), SPEC, make_host_mesh(),
+        _loss_fn, {"w": jnp.full((NODES, 2), 0.1, jnp.float32)},
+        PipelineConfig(batch_per_rank=B, placement=Placement.REPLICATED,
+                       world=2, seed=7, adam=AdamConfig(lr=1e-2),
+                       loop=TrainLoopConfig(epochs=1, log_every=1,
+                                            ckpt_every=1,
+                                            ckpt_dir=str(tmp_path / "ck"))),
+        elastic=elastic)
+    with pytest.raises(RuntimeError, match="closed by peer"):
+        pipe.fit(eval_fn=None)
+    assert latest_step(str(tmp_path / "ck")) is None  # standby: none durable
+
+    outcome = pipe.succeed_as_leader([0])
+    assert outcome is not None
+    assert outcome["leader"] == 1
+    assert outcome["ckpt_step"] == 3                  # the failure step
+    assert latest_step(str(tmp_path / "ck")) == 3     # ...now durable
+    assert outcome["plan"].kind == "shrink"
+    assert outcome["plan"].dropped_workers == (0,)
+    assert outcome["plan"].decided_by == 1
+
+
+def test_non_successor_does_not_take_over(tmp_path):
+    """A survivor whose lowest live rank is NOT its own must stay a
+    standby: no checkpoint write, no plan — the real successor owns both."""
+    tracker = LeaderTracker(3, [2], timeout=1e9)
+    elastic = ElasticConfig(leader=tracker, remesh="relaunch")
+    pipe = build_pipeline(
+        make_traffic_series(ENTRIES, NODES), SPEC, make_host_mesh(),
+        _loss_fn, {"w": jnp.full((NODES, 2), 0.1, jnp.float32)},
+        PipelineConfig(batch_per_rank=B, placement=Placement.REPLICATED,
+                       world=3, seed=7,
+                       loop=TrainLoopConfig(epochs=1,
+                                            ckpt_dir=str(tmp_path / "ck"))),
+        elastic=elastic)
+    assert pipe.succeed_as_leader([0]) is None        # rank 1 outranks us
+    assert not os.path.exists(str(tmp_path / "ck")) \
+        or latest_step(str(tmp_path / "ck")) is None

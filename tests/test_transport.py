@@ -12,10 +12,13 @@ processes.
 """
 import json
 import os
+import threading
 import time
 
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.distributed import (FileHeartbeatTransport, TcpHeartbeatCollector,
                                TcpHeartbeatEmitter, make_transport)
@@ -137,6 +140,218 @@ def test_make_transport_factory(tmp_path):
         coll.close()
     with pytest.raises(ValueError, match="heartbeat transport"):
         make_transport("carrier-pigeon:/loft")
+
+
+# ------------------------------------------------------- chaos property tests
+# The contracts every transport must hold under ADVERSARIAL interleavings —
+# concurrent emitters racing the poller, duplicate/out-of-order seqs from
+# restarted emitters, torn beat files, emitters outliving a collector.
+# Leader succession leans on these: every survivor derives its verdict from
+# this state, so the contracts must hold on every process, not just rank 0.
+# (hypothesis where installed; the conftest seeded fallback otherwise.)
+
+@settings(max_examples=15, deadline=None)
+@given(plans=st.lists(st.lists(st.integers(0, 60), min_size=1, max_size=6),
+                      min_size=1, max_size=5))
+def test_file_transport_concurrent_emitters_chaos(plans):
+    """One emitter thread per rank (the real topology: every rank has
+    exactly one owner) hammers a shared directory while the monitor polls
+    concurrently.  Under every interleaving: polls never crash on
+    mid-replace files, report only ranks that actually emitted — with step
+    values those ranks actually sent — every rank's LAST beat is
+    eventually reported, and a quiescent transport reports nothing."""
+    import tempfile
+    d = tempfile.mkdtemp()
+    monitor = FileHeartbeatTransport(d)
+    emitters = [FileHeartbeatTransport(d) for _ in plans]
+    polled: list[dict] = []
+    stop = threading.Event()
+
+    def poll_loop():
+        while not stop.is_set():
+            polled.append(monitor.step_feed(0, len(plans)))
+
+    def emit_loop(rank, steps):
+        for s in steps:
+            emitters[rank].emit(rank, s)
+
+    poller = threading.Thread(target=poll_loop)
+    workers = [threading.Thread(target=emit_loop, args=(r, steps))
+               for r, steps in enumerate(plans)]
+    poller.start()
+    for t in workers:
+        t.start()
+    for t in workers:
+        t.join()
+    stop.set()
+    poller.join()
+    polled.append(monitor.step_feed(0, len(plans)))  # drain the final state
+    reported: dict[int, list] = {}
+    for beats in polled:
+        for rank, (step, _) in beats.items():
+            reported.setdefault(rank, []).append(step)
+    assert set(reported) == set(range(len(plans)))
+    for rank, steps in enumerate(plans):
+        assert set(reported[rank]) <= set(steps)
+        assert reported[rank][-1] == steps[-1]
+    assert monitor.step_feed(1, len(plans)) == {}    # stale ≠ alive
+
+
+@settings(max_examples=25, deadline=None)
+@given(seqs=st.lists(st.integers(1, 5), min_size=1, max_size=8))
+def test_file_transport_seq_gate_duplicates_and_reordering(seqs):
+    """The freshness gate is `seq CHANGED since the last poll`: a re-written
+    identical seq is silent, ANY change — including a seq going BACKWARDS,
+    a restarted emitter re-counting from 1 — reports fresh, and the poll
+    after is always empty."""
+    import tempfile
+    t = FileHeartbeatTransport(tempfile.mkdtemp())
+    last = None
+    for i, seq in enumerate(seqs):
+        with open(os.path.join(t.dir, "hb_0.json"), "w") as f:
+            json.dump({"rank": 0, "step": i, "seq": seq,
+                       "step_time": None, "wall": time.time()}, f)
+        beats = t.step_feed(i, 1)
+        assert beats == ({} if seq == last else {0: (i, None)})
+        assert t.step_feed(i, 1) == {}
+        last = seq
+
+
+@settings(max_examples=25, deadline=None)
+@given(cut=st.integers(0, 70), step=st.integers(0, 99))
+def test_file_transport_torn_write_fuzz(cut, step):
+    """A beat file torn at ANY byte offset: the poller never crashes, never
+    reports the torn rank, keeps reporting healthy ranks, and picks the
+    beat up as soon as the file is completed."""
+    import tempfile
+    t = FileHeartbeatTransport(tempfile.mkdtemp())
+    t.emit(1, step)
+    payload = json.dumps({"rank": 0, "step": step, "seq": 1,
+                          "step_time": None, "wall": time.time()})
+    with open(os.path.join(t.dir, "hb_0.json"), "w") as f:
+        f.write(payload[:min(cut, len(payload) - 1)])  # always truncated
+    assert t.step_feed(step, 2) == {1: (step, None)}
+    snap = t.snapshot()                    # snapshot shares the robustness
+    assert 1 in snap and 0 not in snap
+    with open(os.path.join(t.dir, "hb_0.json"), "w") as f:
+        f.write(payload)
+    assert t.step_feed(step, 2) == {0: (step, None)}
+
+
+@settings(max_examples=10, deadline=None)
+@given(plans=st.lists(st.lists(st.integers(0, 30), min_size=1, max_size=5),
+                      min_size=1, max_size=4))
+def test_tcp_collector_concurrent_emitters_chaos(plans):
+    """One emitter thread per rank into one collector: every rank's final
+    beat is eventually reported, reported steps are only ones that rank
+    sent, and once the streams drain a poll reports nothing new."""
+    coll = TcpHeartbeatCollector(port=0)
+    try:
+        def emit_loop(rank, steps):
+            em = TcpHeartbeatEmitter(coll.address)
+            for s in steps:
+                em.emit(rank, s)
+            em.close()
+
+        workers = [threading.Thread(target=emit_loop, args=(r, steps))
+                   for r, steps in enumerate(plans)]
+        for t in workers:
+            t.start()
+        for t in workers:
+            t.join()
+        reported: dict[int, list] = {}
+        deadline = time.time() + 10
+
+        def all_finals_in() -> bool:
+            return all(reported.get(r) and reported[r][-1] == steps[-1]
+                       for r, steps in enumerate(plans))
+
+        while time.time() < deadline and not all_finals_in():
+            for rank, (step, _) in coll.step_feed(0, len(plans)).items():
+                reported.setdefault(rank, []).append(step)
+            time.sleep(0.01)
+        assert all_finals_in()
+        for rank, steps in enumerate(plans):
+            assert set(reported[rank]) <= set(steps)
+        time.sleep(0.2)                      # let any in-flight drain settle
+        coll.step_feed(0, len(plans))
+        assert coll.step_feed(1, len(plans)) == {}
+    finally:
+        coll.close()
+
+
+def test_tcp_emitter_reconnects_after_collector_restart():
+    """Emitter reconnect mid-poll: the collector dies and is reborn on the
+    SAME address (a restarted monitor host); the fire-and-forget emitter
+    re-dials on a later beat — dropping, never raising — and beats flow
+    into the reborn collector's fresh poll baseline."""
+    coll = TcpHeartbeatCollector(port=0)
+    addr, port = coll.address, coll.port
+    em = TcpHeartbeatEmitter(addr)
+    em.emit(0, 1)
+    assert _poll_until(lambda: coll.step_feed(1, 1)) == {0: (1, None)}
+    coll.close()
+    em.emit(0, 2)  # lands in a dead socket / dropped: silence, no exception
+    reborn = TcpHeartbeatCollector(host="127.0.0.1", port=port)
+    try:
+        beats, step = {}, 3
+        deadline = time.time() + 10
+        while time.time() < deadline and 0 not in beats:
+            em.emit(0, step)
+            step += 1
+            beats.update(reborn.step_feed(step, 1))
+            time.sleep(0.02)
+        assert 0 in beats
+    finally:
+        em.close()
+        reborn.close()
+
+
+# ------------------------------------------- failover list + peer mirroring
+def _free_port() -> int:
+    import socket
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def test_tcp_failover_list_mirroring_and_succession():
+    """The leader-succession transport topology end to end: collectors on
+    a ``tcp://a:p,b:p`` failover list peer-mirror, so the STANDBY's beat
+    table (snapshot AND step_feed baseline) is primed with beats that were
+    only ever sent to the primary — exactly what a successor needs for
+    death attribution.  When the primary's host dies, emitters fail over
+    down the list and beats land on the standby directly."""
+    spec = f"tcp://127.0.0.1:{_free_port()},127.0.0.1:{_free_port()}"
+    primary = make_transport(spec, serve=True, serve_index=0)
+    standby = make_transport(spec, serve=True, serve_index=1)
+    em = make_transport(spec)
+    try:
+        assert isinstance(em, TcpHeartbeatEmitter)
+        em.emit(2, 5, step_time=0.1)   # a worker's beat, dialled to PRIMARY
+        primary.emit(0, 5)             # the primary host's own local rank
+        for coll in (primary, standby):  # BOTH see both (mirroring)
+            acc = {}
+            deadline = time.time() + 10
+            while time.time() < deadline and set(acc) != {0, 2}:
+                acc.update(coll.step_feed(5, 3))
+                time.sleep(0.01)
+            assert acc == {0: (5, None), 2: (5, 0.1)}
+        assert standby.snapshot()[2]["step"] == 5   # primed for attribution
+        # rank 0's host dies; the emitter fails over to the standby
+        primary.close()
+        acc, step = {}, 6
+        deadline = time.time() + 15
+        while time.time() < deadline and 2 not in acc:
+            em.emit(2, step)
+            step += 1
+            acc.update(standby.step_feed(step, 3))
+            time.sleep(0.02)
+        assert 2 in acc                # the successor keeps collecting
+    finally:
+        em.close()
+        standby.close()
+        primary.close()
 
 
 # --------------------------------------------- end-to-end through the engine
