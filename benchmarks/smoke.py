@@ -7,7 +7,9 @@ serialises everything to ``BENCH_smoke.json``:
 
 - ``headline``: the few numbers a trend line wants — tokens/s through the
   fused gather/step, gather microseconds for the ``dense`` and
-  ``pallas``-interpret lowerings, peak RSS of the whole run;
+  ``pallas``-interpret lowerings, the async-feed-pipeline overlap
+  (``step_overlap_pct`` / ``prefetch_step_us``, with the staleness-0
+  bit-identity asserted on every run), peak RSS of the whole run;
 - ``rows``: every ``name,value,unit,detail`` record the suites printed, so
   nothing the CSV stream shows is lost from the artifact.
 
@@ -59,6 +61,97 @@ def _gather_microbench() -> None:
         raise SystemExit("pallas gather diverged from the dense lowering")
 
 
+def _prefetch_bench(staleness: int) -> None:
+    """Measured overlap of the async feed pipeline (ISSUE 6) — three arms of
+    the same smoke-scale pgt_dcrnn fit:
+
+    1. synchronous (prefetch_depth=0): the baseline step time AND the
+       reference loss trajectory;
+    2. pipelined at staleness 0: must be BIT-IDENTICAL to (1) — the
+       refactor's correctness evidence, asserted here on every bench run;
+    3. pipelined at ``staleness``: the timed arm — host feed assembly and
+       the host→device transfer move off the step thread, so the step-time
+       delta vs (1) is the measured overlap (not asserted into existence).
+
+    The shape is deliberately host-bound (tiny model, modest batch): the
+    caller-thread feed path — host row assembly + the Python-side
+    ``device_put`` — is the overhead the pipeline hides, and this is where
+    it is visible.  Arms are INTERLEAVED (sync/stale alternating rounds)
+    and compared by median so machine noise hits both the same way; a
+    single-shot A-then-B comparison on a shared CI core is pure jitter.
+    """
+    import statistics
+
+    from repro.core import Placement, WindowSpec
+    from repro.data import (gaussian_adjacency, make_traffic_series,
+                            random_sensor_coords, transition_matrices)
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import pgt_dcrnn
+    from repro.pipeline import PipelineConfig, build_pipeline
+    from repro.train import TrainLoopConfig
+
+    n, entries = 8, 900
+    spec = WindowSpec(horizon=2, input_len=2)
+    series = make_traffic_series(entries, n)
+    adj = gaussian_adjacency(random_sensor_coords(n))
+    sup = tuple(jnp.asarray(s) for s in transition_matrices(adj))
+    cfg = pgt_dcrnn.PGTDCRNNConfig(num_nodes=n, hidden=8, input_len=2,
+                                   horizon=2)
+    params = pgt_dcrnn.init(jax.random.PRNGKey(0), cfg)
+
+    def loss_fn(p, x, y):
+        return pgt_dcrnn.loss_fn(p, cfg, sup, x, y), {}
+
+    mesh = make_host_mesh()
+
+    def run(depth: int, stale: int, *, log_every: int):
+        """(loss rows, steady-state step µs): a fresh 2-epoch fit; epoch 0
+        absorbs the jit compile, epoch 1 is the timed steady state."""
+        loop = TrainLoopConfig(epochs=2, log_every=log_every, eval_every=0,
+                               prefetch_depth=depth, staleness=stale)
+        pipe = build_pipeline(
+            series, spec, mesh, loss_fn, params,
+            PipelineConfig(batch_per_rank=16, placement=Placement.REPLICATED,
+                           world=1, seed=0, loop=loop))
+        _, hist = pipe.fit(eval_fn=None)
+        losses = [h["loss"] for h in hist if "epoch_time_s" not in h]
+        steady = [h["epoch_time_s"] for h in hist
+                  if "epoch_time_s" in h and h["epoch"] == 1][0]
+        return losses, 1e6 * steady / pipe.steps_per_epoch
+
+    # Correctness arms: full per-step loss trajectories, compared exactly.
+    sync_losses, _ = run(0, 0, log_every=1)
+    id_losses, _ = run(2, 0, log_every=1)
+    bit_identical = sync_losses == id_losses
+    stale_losses = (run(2, staleness, log_every=1)[0] if staleness >= 1
+                    else id_losses)
+    # Timing arms: per-step logging off (each logged row is a host sync
+    # that would mask the overlap), interleaved rounds, medians.
+    rounds, sync_ts, stale_ts = 3, [], []
+    for _ in range(rounds):
+        sync_ts.append(run(0, 0, log_every=0)[1])
+        stale_ts.append(run(2, staleness, log_every=0)[1])
+    sync_us = statistics.median(sync_ts)
+    stale_us = statistics.median(stale_ts)
+    overlap_pct = 100.0 * (1.0 - stale_us / sync_us)
+    steps = len(sync_losses)
+    row("prefetch/sync_step_us", f"{sync_us:.1f}", "us",
+        f"synchronous pull-per-step baseline, median of {rounds} "
+        f"interleaved rounds")
+    row("prefetch/prefetch_step_us", f"{stale_us:.1f}", "us",
+        f"pipelined, depth=2 staleness={staleness}")
+    row("prefetch/step_overlap_pct", f"{overlap_pct:.1f}", "%",
+        "100*(1 - pipelined/sync) median steady-state step time")
+    row("prefetch/bit_identical_at_0", int(bit_identical), "bool",
+        f"staleness-0 loss trajectory ({steps} steps) vs synchronous")
+    row("prefetch/final_loss_sync", f"{sync_losses[-1]:.10g}", "loss", "")
+    row("prefetch/final_loss_stale", f"{stale_losses[-1]:.10g}", "loss",
+        f"staleness={staleness}")
+    if not bit_identical:
+        raise SystemExit("staleness-0 pipelined losses diverged from the "
+                         "synchronous path — the prefetch identity is broken")
+
+
 def _pick(records: list[dict], name: str) -> float:
     vals = [float(r["value"]) for r in records if r["name"] == name]
     if not vals:
@@ -69,6 +162,9 @@ def _pick(records: list[dict], name: str) -> float:
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="results/BENCH_smoke.json")
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="staleness of the TIMED prefetch arm (the "
+                         "staleness-0 bit-identity arm always runs)")
     args = ap.parse_args(argv)
 
     t0 = time.perf_counter()
@@ -77,6 +173,7 @@ def main(argv=None) -> None:
         fig7_scaling.main(smoke=True)
         table3_index_vs_base.main(smoke=True)
         _gather_microbench()
+        _prefetch_bench(args.staleness)
     wall = time.perf_counter() - t0
 
     tokens = max(float(r["value"]) for r in records
@@ -97,7 +194,19 @@ def main(argv=None) -> None:
             "step_overhead_vs_base_pct": round(
                 100 * (_pick(records, "table3/step_index")
                        / _pick(records, "table3/step_base") - 1), 1),
+            "step_overlap_pct": _pick(records, "prefetch/step_overlap_pct"),
+            "prefetch_step_us": _pick(records, "prefetch/prefetch_step_us"),
             "peak_rss_bytes": peak_rss_bytes(),
+        },
+        "prefetch": {
+            "staleness": args.staleness,
+            "bit_identical_at_0": bool(
+                _pick(records, "prefetch/bit_identical_at_0")),
+            "sync_step_us": _pick(records, "prefetch/sync_step_us"),
+            "prefetch_step_us": _pick(records, "prefetch/prefetch_step_us"),
+            "step_overlap_pct": _pick(records, "prefetch/step_overlap_pct"),
+            "final_loss_sync": _pick(records, "prefetch/final_loss_sync"),
+            "final_loss_stale": _pick(records, "prefetch/final_loss_stale"),
         },
         "rows": records,
     }

@@ -37,6 +37,11 @@ HEADLINE_FIELDS: dict[str, tuple[str, str]] = {
     "gather_dense_us": ("lower", "ratio"),
     "gather_pallas_interpret_us": ("lower", "ratio"),
     "step_overhead_vs_base_pct": ("lower", "points"),
+    # Async feed pipeline (ISSUE 6): the measured overlap win.  Losing it —
+    # overlap points falling, pipelined step time rising — is a regression
+    # the gate must catch, same bands as the other hot-path numbers.
+    "step_overlap_pct": ("higher", "points"),
+    "prefetch_step_us": ("lower", "ratio"),
     "peak_rss_bytes": ("lower", "ratio"),
 }
 

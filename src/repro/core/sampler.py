@@ -24,6 +24,11 @@ Evaluation mirrors the same contract through :class:`EvalFeeds`
 (``eval_feed(rank, pool)``): val/test pools are carved into the same
 rank-major column blocks, deterministically and without shuffling, so a
 multi-process fleet scores each eval window exactly once.
+
+Feeds are also CHUNK-ITERABLE (:class:`FeedStream`): ``feed_stream(rank,
+epoch)`` yields successive row blocks that concatenate exactly to
+``feed(rank, epoch)`` — the handle the async prefetch pipeline pulls from a
+background thread instead of materializing whole-epoch arrays up front.
 """
 from __future__ import annotations
 
@@ -46,7 +51,38 @@ def _rng(seed: int, epoch: int) -> np.random.Generator:
     return np.random.default_rng(np.random.SeedSequence([seed, epoch]))
 
 
-class EvalFeeds:
+class FeedStream:
+    """Chunk-iterable view of the per-rank feed — the contract the async
+    prefetch pipeline (:mod:`repro.pipeline.prefetch`) consumes.
+
+    ``feed_stream(rank, epoch)`` yields successive ``[<=chunk, batch]``
+    row blocks whose concatenation is EXACTLY ``feed(rank, epoch)`` — same
+    values, same order (the invariant test_feeds_property pins for every
+    sampler × world).  Because the feed is a pure function of
+    (seed, epoch, rank), a block materialized early — e.g. on a prefetcher
+    thread, several steps before it is consumed — carries the identical
+    window ids it would carry if built lockstep, which is what makes the
+    pipelined path's staleness-0 bit-identity provable rather than tested
+    into existence.
+
+    The default implementation slices the materialized feed; samplers whose
+    feeds are expensive to assemble may override it to build blocks
+    incrementally (nothing in the contract requires the whole epoch array
+    to ever exist).
+    """
+
+    def feed_stream(self, rank: int, epoch: int, *, start: int = 0,
+                    chunk: int = 8):
+        """Yield ``[<=chunk, batch]`` blocks of ``feed(rank, epoch)`` rows,
+        beginning at row ``start`` (mid-epoch resume)."""
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        feed = self.feed(rank, epoch)
+        for lo in range(start, feed.shape[0], chunk):
+            yield feed[lo:lo + chunk]
+
+
+class EvalFeeds(FeedStream):
     """Deterministic per-rank EVAL feeds — the evaluation mirror of the
     ``feed(rank, epoch)`` contract.
 

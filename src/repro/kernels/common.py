@@ -1,15 +1,86 @@
-"""Shared kernel-op plumbing."""
+"""Shared kernel-op plumbing: per-call backend resolution + block defaults.
+
+Every verdict derived from the jax backend is resolved LAZILY, PER CALL —
+never at import, never cached at first use.  Two reasons:
+
+- reading the backend at import would initialize jax before a multi-host
+  launcher can call ``jax.distributed.initialize()`` (models/kernels are
+  imported long before main runs);
+- caching at first use would let whichever thread happens to call first pin
+  the verdict for everyone.  The async feed prefetcher
+  (:mod:`repro.pipeline.prefetch`) runs host threads that may race device
+  init: its stage-1 thread is numpy-only by contract, but a stage-2
+  transfer thread CAN touch jax early, and a first-use cache primed there
+  would freeze whatever backend was visible at that instant.  With per-call
+  resolution there is nothing to pin — every kernel call re-reads
+  ``jax.default_backend()`` (cheap: jax caches the client itself), and an
+  explicit ``backend=`` override always wins over the ambient default.
+"""
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 
 
-def interpret_on_cpu() -> bool:
+@dataclasses.dataclass(frozen=True)
+class KernelDefaults:
+    """Per-backend default tiling for the Pallas kernel ops.
+
+    ``lane``        last-dim tile quantum (TPU lane width); last-dim blocks
+                    should be multiples of this.
+    ``block_c_max`` widest last-dim the window gather keeps as ONE block
+                    when it is lane-aligned.
+    ``block_c_cap`` last-dim block cap when the width is ragged.
+    ``block_q/k``   flash-attention query/key tile lengths.
+    ``block_n``     diffusion-conv node tile.
+    ``block_b``     linear-scan batch tile (used when the batch divides it).
+    ``scan_chunk``  linear-scan sequence chunk.
+    ``interpret``   run Pallas in interpret mode (CPU has no Mosaic/Triton
+                    lowering; interpret executes the kernel body in Python
+                    for correctness).
+    """
+
+    lane: int = 128
+    block_c_max: int = 4096
+    block_c_cap: int = 2048
+    block_q: int = 256
+    block_k: int = 256
+    block_n: int = 128
+    block_b: int = 8
+    scan_chunk: int = 256
+    interpret: bool = False
+
+
+#: Static per-backend table — selection from it happens per call in
+#: :func:`kernel_defaults`; nothing here reads jax state.
+_DEFAULTS = {
+    "tpu": KernelDefaults(),
+    "gpu": KernelDefaults(),
+    "cpu": KernelDefaults(interpret=True),
+}
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """The backend a kernel call should tile for: the explicit override when
+    given, else ``jax.default_backend()`` read NOW (per call)."""
+    return backend if backend is not None else jax.default_backend()
+
+
+def kernel_defaults(backend: str | None = None) -> KernelDefaults:
+    """Per-backend :class:`KernelDefaults`, resolved at call time.
+
+    Unknown backends get the TPU-shaped defaults with interpret off — a new
+    accelerator is better served by real lowering + lane-aligned tiles than
+    by Python interpret mode.
+    """
+    return _DEFAULTS.get(resolve_backend(backend), KernelDefaults())
+
+
+def interpret_on_cpu(backend: str | None = None) -> bool:
     """Whether Pallas kernels should run in interpret mode (CPU container).
 
-    Resolved LAZILY at call time, never at import: reading the backend at
-    import would initialize jax before a multi-host launcher can call
-    ``jax.distributed.initialize()`` (models/kernels are imported long
-    before main runs).
+    Kept as the historical entry point; equivalent to
+    ``kernel_defaults(backend).interpret``.
     """
-    return jax.default_backend() == "cpu"
+    return kernel_defaults(backend).interpret

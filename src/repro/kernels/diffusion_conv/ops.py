@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.common import interpret_on_cpu
+from repro.kernels.common import kernel_defaults
 from repro.kernels.diffusion_conv.kernel import hop_project
 from repro.kernels.diffusion_conv.ref import diffusion_conv_ref
 
@@ -28,12 +28,20 @@ def diffusion_conv(
     *,
     k_hops: int,
     use_pallas: bool = False,
-    block_n: int = 128,
+    block_n: int | None = None,
+    backend: str | None = None,
 ):
-    """x: [B, N, C] -> [B, N, H].  See ref.py for the weight layout."""
+    """x: [B, N, C] -> [B, N, H].  See ref.py for the weight layout.
+
+    Tiling/interpret defaults resolve per call from ``backend`` (None =
+    ambient, read now).
+    """
     if not use_pallas:
         return diffusion_conv_ref(x, supports, w, b, k_hops=k_hops)
 
+    kd = kernel_defaults(backend)
+    if block_n is None:
+        block_n = kd.block_n
     bsz, n, c = x.shape
     h = w.shape[1]
     n_pad = int(np.ceil(n / block_n) * block_n)
@@ -49,6 +57,6 @@ def diffusion_conv(
         for k in range(k_hops):
             z, y = hop_project(
                 s_p, z, wk[si, k].astype(x.dtype), y,
-                block_n=block_n, interpret=interpret_on_cpu(),
+                block_n=block_n, interpret=kd.interpret,
             )
     return jnp.transpose(y[:n], (1, 0, 2)) + b

@@ -3,21 +3,28 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.common import interpret_on_cpu
+from repro.kernels.common import kernel_defaults
 from repro.kernels.flash_attention.kernel import flash_attention as _flash_kernel
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
 def flash_attention(q, k, v, *, causal: bool = True, use_pallas: bool = False,
-                    block_q: int = 256, block_k: int = 256):
-    """q: [B, S, H, D]; k/v: [B, S, Hkv, D] -> [B, S, H, D] (model layout)."""
+                    block_q: int | None = None, block_k: int | None = None,
+                    backend: str | None = None):
+    """q: [B, S, H, D]; k/v: [B, S, Hkv, D] -> [B, S, H, D] (model layout).
+
+    Tiling/interpret defaults resolve per call from ``backend`` (None =
+    ambient, read now).
+    """
     qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
     if not use_pallas:
         out = flash_attention_ref(qt, kt, vt, causal=causal)
         return jnp.swapaxes(out, 1, 2)
+    kd = kernel_defaults(backend)
     s = qt.shape[2]
-    bq, bk = min(block_q, s), min(block_k, s)
+    bq = min(block_q if block_q is not None else kd.block_q, s)
+    bk = min(block_k if block_k is not None else kd.block_k, s)
     pad_q = (-s) % bq
     pad_k = (-s) % bk
     if pad_q or pad_k:
@@ -27,5 +34,5 @@ def flash_attention(q, k, v, *, causal: bool = True, use_pallas: bool = False,
         kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
         vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
     out = _flash_kernel(qt, kt, vt, causal=causal, block_q=bq, block_k=bk,
-                        interpret=interpret_on_cpu())
+                        interpret=kd.interpret)
     return jnp.swapaxes(out[:, :, :s], 1, 2)

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.common import interpret_on_cpu
+from repro.kernels.common import kernel_defaults
 from repro.kernels.linear_scan.kernel import linear_scan as _linear_scan_kernel
 from repro.kernels.linear_scan.ref import linear_scan_ref
 
@@ -13,11 +13,13 @@ def linear_scan(
     h0: jnp.ndarray | None = None,
     *,
     use_pallas: bool = False,
-    chunk: int = 256,
+    chunk: int | None = None,
+    backend: str | None = None,
 ):
     """h_t = a_t*h_{t-1} + b_t.  a/b: [B, S, D], h0: [B, D] (zeros if None).
 
-    Returns (h_seq [B, S, D], h_last [B, D]).
+    Returns (h_seq [B, S, D], h_last [B, D]).  Tiling/interpret defaults
+    resolve per call from ``backend`` (None = ambient, read now).
     """
     bsz, s, d = a.shape
     if h0 is None:
@@ -25,14 +27,15 @@ def linear_scan(
     if not use_pallas:
         return linear_scan_ref(a, b, h0)
 
-    chunk = min(chunk, s)
-    block_b = 8 if bsz % 8 == 0 else 1
-    block_d = 128 if d % 128 == 0 else d
+    kd = kernel_defaults(backend)
+    chunk = min(chunk if chunk is not None else kd.scan_chunk, s)
+    block_b = kd.block_b if bsz % kd.block_b == 0 else 1
+    block_d = kd.lane if d % kd.lane == 0 else d
     pad_s = (-s) % chunk
     if pad_s:
         # padded steps use a=1, b=0 (identity) so h_last is unaffected
         a = jnp.pad(a, ((0, 0), (0, pad_s), (0, 0)), constant_values=1)
         b = jnp.pad(b, ((0, 0), (0, pad_s), (0, 0)))
     h_seq, h_last = _linear_scan_kernel(a, b, h0, chunk=chunk, block_b=block_b,
-                                        block_d=block_d, interpret=interpret_on_cpu())
+                                        block_d=block_d, interpret=kd.interpret)
     return h_seq[:, :s], h_last

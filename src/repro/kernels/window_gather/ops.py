@@ -9,11 +9,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.common import interpret_on_cpu
+from repro.kernels.common import kernel_defaults
 from repro.kernels.window_gather.kernel import window_gather as _window_gather_kernel
 from repro.kernels.window_gather.ref import window_gather_ref
-
-_LANE = 128  # TPU lane width — last-dim blocks should be multiples of this
 
 
 def window_gather(
@@ -23,22 +21,29 @@ def window_gather(
     span: int,
     use_pallas: bool = False,
     block_c: int | None = None,
+    backend: str | None = None,
 ) -> jnp.ndarray:
-    """series: [T, ...], starts: [B] -> [B, span, ...]."""
+    """series: [T, ...], starts: [B] -> [B, span, ...].
+
+    Tiling/interpret defaults resolve per call from ``backend`` (None = the
+    ambient ``jax.default_backend()``, read now — never cached).
+    """
     if not use_pallas:
         return window_gather_ref(series, starts, span=span)
 
+    kd = kernel_defaults(backend)
     t = series.shape[0]
     trailing = series.shape[1:]
     c = int(np.prod(trailing)) if trailing else 1
     flat = series.reshape(t, c)
     if block_c is None:
-        block_c = c if c % _LANE == 0 and c <= 4096 else min(c, 2048)
+        block_c = (c if c % kd.lane == 0 and c <= kd.block_c_max
+                   else min(c, kd.block_c_cap))
     pad = (-c) % block_c
     if pad:
         flat = jnp.pad(flat, ((0, 0), (0, pad)))
     out = _window_gather_kernel(flat, starts.astype(jnp.int32), span=span,
-                                block_c=block_c, interpret=interpret_on_cpu())
+                                block_c=block_c, interpret=kd.interpret)
     out = out[..., :c]
     return out.reshape((starts.shape[0], span) + trailing)
 

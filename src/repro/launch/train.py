@@ -307,6 +307,21 @@ def main() -> None:
                          "eval pool and the window-weighted metric is "
                          "bit-identical to the single-host value")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="async feed pipeline: materialize feed rows this "
+                         "many chunks ahead on a background thread (0 = the "
+                         "synchronous pull-per-step path).  At --staleness 0 "
+                         "the pipelined run is bit-identical to synchronous")
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="bounded-stale transfer overlap: 0 keeps lockstep "
+                         "semantics (host->device transfer at consume, on "
+                         "the step thread — provably bit-identical); s >= 1 "
+                         "lets the transfer for step k+s run on a background "
+                         "thread while step k computes (values unchanged — "
+                         "feeds are pure in (seed, epoch, rank) — only the "
+                         "overlap changes)")
+    ap.add_argument("--prefetch-chunk", type=int, default=8,
+                    help="feed rows per prefetched block")
     ap.add_argument("--no-halo", action="store_true",
                     help="PARTITIONED: keep windows strictly interior to each "
                          "rank's series shard (communication-free; see "
@@ -391,7 +406,10 @@ def main() -> None:
                                     total_steps=total)
     loop = TrainLoopConfig(epochs=args.epochs, log_every=10,
                            ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
-                           eval_every=args.eval_every)
+                           eval_every=args.eval_every,
+                           prefetch_depth=args.prefetch_depth,
+                           staleness=args.staleness,
+                           prefetch_chunk=args.prefetch_chunk)
 
     t0 = time.perf_counter()
     # The sink mirrors every logged row AS IT LANDS, so the rows survive the

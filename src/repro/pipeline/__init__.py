@@ -6,6 +6,7 @@
 ``build_pipeline`` is the compatibility constructor (returns an Engine).
 """
 from repro.pipeline.gathers import GATHERS, resolve_gather
+from repro.pipeline.prefetch import FeedPrefetcher, PrefetchPlan
 from repro.pipeline.samplers import ShardAlignedBatchSampler
 from repro.pipeline.dataplane import DataPlane, PipelineConfig, build_dataplane
 from repro.pipeline.engine import ElasticConfig, Engine, build_engine
@@ -20,6 +21,8 @@ __all__ = [
     "Engine",
     "ElasticConfig",
     "build_engine",
+    "FeedPrefetcher",
+    "PrefetchPlan",
     "GATHERS",
     "resolve_gather",
     "ShardAlignedBatchSampler",

@@ -120,6 +120,12 @@ class DataPlane:
     series_sharding: NamedSharding
     world: int
     batch_sharding: NamedSharding | None
+    # split -> (tail_len, replicated device batch | None): the ragged eval
+    # tail is identical every evaluate call, so its device row is built once
+    # per data plane (a re-mesh builds a fresh plane, naturally invalidating
+    # the cache).  See :meth:`eval_tail_batch`.
+    _eval_tail_cache: dict = dataclasses.field(default_factory=dict,
+                                               repr=False, compare=False)
 
     # ------------------------------------------------------------- accessors
     @property
@@ -184,6 +190,37 @@ class DataPlane:
             return self.epoch_global(epoch)
         return np.concatenate([self.feed(r, epoch) for r in ranks], axis=1)
 
+    def feed_stream(self, rank: int, epoch: int, *, start: int = 0,
+                    chunk: int = 8):
+        """Chunk-iterable ``feed(rank, epoch)`` (see
+        :class:`repro.core.sampler.FeedStream`): yields ``[<=chunk, batch]``
+        row blocks that concatenate exactly to the feed, beginning at row
+        ``start``."""
+        return self.sampler.feed_stream(rank, epoch, start=start, chunk=chunk)
+
+    def grid_stream(self, epoch: int, *, start: int = 0, chunk: int = 8):
+        """Chunk-iterable :meth:`epoch_grid`: ``[<=chunk, width]`` row blocks
+        of what THIS process iterates, beginning at row ``start``.
+
+        This is the host half of the prefetch pipeline's contract — pure
+        numpy, safe to drain from a background thread.  Under multi-process
+        SPMD each block is the concatenation of this process's per-rank
+        ``feed_stream`` blocks (all streams share start/chunk, so the blocks
+        are row-aligned); single-process it slices ``epoch_global`` directly.
+        Either way the blocks reassemble exactly to ``epoch_grid(epoch)`` —
+        the invariant test_feeds_property pins.
+        """
+        ranks = self.process_ranks
+        if ranks is None:
+            grid = self.epoch_global(epoch)
+            for lo in range(start, grid.shape[0], chunk):
+                yield grid[lo:lo + chunk]
+            return
+        streams = [self.sampler.feed_stream(r, epoch, start=start, chunk=chunk)
+                   for r in ranks]
+        for blocks in zip(*streams):
+            yield np.concatenate(blocks, axis=1)
+
     # ------------------------------------------------------------ eval feeds
     def eval_pool(self, split: str = "val") -> np.ndarray:
         """The split's global window-id pool (``val_windows``/``test_windows``)."""
@@ -216,7 +253,66 @@ class DataPlane:
         return np.concatenate(
             [self.sampler.eval_feed(r, pool) for r in ranks], axis=1), tail
 
+    def eval_tail_batch(self, split: str = "val"):
+        """``(tail_len, replicated device batch | None)`` for the split's
+        ragged eval tail — built ONCE per data plane and cached.
+
+        The tail is a pure function of the split pool (no epoch, no
+        shuffle), so re-running ``batch_of_starts(tail, replicate=True)``
+        every evaluate call only repeats the same host→device transfer; the
+        cache keeps the replicated row resident instead.  A re-mesh rebuilds
+        the whole plane, so the cache can never serve a stale topology.
+        """
+        hit = self._eval_tail_cache.get(split)
+        if hit is None:
+            tail = self.eval_tail(split)
+            batch = (self.batch_of_starts(tail, replicate=True)
+                     if len(tail) else None)
+            hit = (len(tail), batch)
+            self._eval_tail_cache[split] = hit
+        return hit
+
     # --------------------------------------------------------- data plumbing
+    def host_batch_of_starts(self, window_ids: np.ndarray) -> np.ndarray:
+        """Window ids -> HOST array of start steps (the batch, uncommitted).
+
+        The bounded-stale transfer mode (:meth:`prefetch_transfer`,
+        staleness >= 1): batch construction happens here — on the prefetch
+        thread, ahead of consumption — and the host→device commit rides the
+        jitted step's own dispatch, which enqueues it into the async stream
+        while the PREVIOUS step's computation is still in flight.  On this
+        runtime the Python-side ``device_put`` of a small starts row costs
+        an order of magnitude more caller time than committing the same row
+        inside dispatch, so this is where the pipeline's measured step-time
+        win comes from (benchmarks/smoke.py records it, trend.py gates it).
+        Values are identical either way — same bytes reach the same
+        compiled program.
+        """
+        return np.asarray(self.dataset.starts[np.asarray(window_ids)])
+
+    def can_defer_transfer(self) -> bool:
+        """Whether the step can commit a HOST batch during its own dispatch:
+        single-process with no batch sharding (one device).  Sharded or
+        multi-process batches need the explicit assembly in
+        :meth:`batch_of_starts` (``make_array_from_process_local_data``) —
+        handing jit a raw host row there would let it pick a placement
+        instead of the data plane."""
+        return jax.process_count() == 1 and self.batch_sharding is None
+
+    def prefetch_transfer(self, staleness: int):
+        """The transfer fn the :class:`~repro.pipeline.prefetch.FeedPrefetcher`
+        should run for this staleness.
+
+        ``staleness == 0`` — :meth:`batch_of_starts`, on the consumer
+        thread: the synchronous path's exact op order (the provable
+        bit-identity).  ``staleness >= 1`` — the deferred host-batch mode
+        when the topology allows it, else still :meth:`batch_of_starts`
+        (just moved onto the transfer thread).
+        """
+        if staleness >= 1 and self.can_defer_transfer():
+            return self.host_batch_of_starts
+        return self.batch_of_starts
+
     def batch_of_starts(self, window_ids: np.ndarray, *,
                         replicate: bool = False) -> jnp.ndarray:
         """Window ids (one epoch grid row) -> device array of start steps.

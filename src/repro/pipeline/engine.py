@@ -49,6 +49,7 @@ from repro.distributed import (Checkpointer, HeartbeatMonitor,
 from repro.launch.mesh import shrink_mesh
 from repro.pipeline.dataplane import DataPlane, PipelineConfig, build_dataplane
 from repro.pipeline.gathers import resolve_gather
+from repro.pipeline.prefetch import FeedPrefetcher, PrefetchPlan
 from repro.pipeline.samplers import ShardAlignedBatchSampler
 from repro.train.loop import (RestartSignal, combine_weighted,
                               init_train_state, make_train_step, run_training)
@@ -309,6 +310,22 @@ class Engine:
         self._hb_step = start_step  # last health-polled step (eval re-beats)
         monitor = self._make_monitor()
         restarts_this_fit = 0
+        # Feed the step loop through the async prefetch pipeline when the
+        # loop config asks for it.  The factory reads self.dataplane at CALL
+        # time (once per epoch), so after an elastic re-mesh the next epoch's
+        # stream is built over the new plane — the old stream was already
+        # drained by run_training's finally when the RestartSignal unwound.
+        batch_stream = None
+        if loop.prefetch_depth >= 1:
+            plan = PrefetchPlan(depth=loop.prefetch_depth,
+                                staleness=loop.staleness,
+                                chunk=loop.prefetch_chunk)
+
+            def batch_stream(epoch: int, done: int) -> FeedPrefetcher:
+                dp = self.dataplane
+                return FeedPrefetcher(
+                    dp.grid_stream(epoch, start=done, chunk=plan.chunk),
+                    dp.prefetch_transfer(plan.staleness), plan)
         while True:
             try:
                 state, hist = run_training(
@@ -324,6 +341,7 @@ class Engine:
                     start_done_in_epoch=start_done,
                     health_cb=self._health_cb(monitor),
                     history_sink=history_sink,
+                    batch_stream=batch_stream,
                 )
                 history.extend(hist)
                 return state, history
@@ -345,6 +363,16 @@ class Engine:
                 state, start_epoch, start_step, start_done = \
                     self._apply_plan(sig, loop)
                 monitor = self._make_monitor()
+                if self.elastic.emitter is not None:
+                    # Draining the prefetcher + re-meshing + re-jitting is a
+                    # coordinated pause just like epoch-end eval: nobody
+                    # steps, so nobody heartbeats.  Re-announce liveness
+                    # before resuming so the first post-restart poll doesn't
+                    # read the healthy fleet as stale.
+                    try:
+                        self.elastic.emitter(self._hb_step)
+                    except OSError:
+                        pass
             except BaseException:
                 # A non-elastic failure (e.g. a collective erroring out when
                 # a real peer died) must not strand the in-flight async
@@ -383,10 +411,12 @@ class Engine:
             pairs.append((float(loss), self.global_batch))
         # The tail only contributes when the budget was not already spent on
         # full chunks — the same coverage the pre-distributed evaluate gave.
+        # Its replicated device row is identical every call, so it comes
+        # from the data plane's per-split cache (one transfer per plane).
         if len(tail) and rows.shape[0] < max_batches:
-            loss, _ = self._eval_loss(
-                params, dp.batch_of_starts(tail, replicate=True))
-            pairs.append((float(loss), len(tail)))
+            tail_len, tail_batch = dp.eval_tail_batch(split)
+            loss, _ = self._eval_loss(params, tail_batch)
+            pairs.append((float(loss), tail_len))
         return combine_weighted(pairs)
 
     # ---------------------------------------------------------------- elastic

@@ -66,6 +66,15 @@ class TrainLoopConfig:
     # epoch, the historical behavior; 0 = never, even with an eval_fn).
     # Epoch-indexed, not call-counted, so a relaunch-resume keeps the cadence.
     eval_every: int = 1
+    # Async feed prefetch (repro.pipeline.prefetch).  prefetch_depth 0 keeps
+    # the synchronous pull-per-step path; >= 1 streams batches through a
+    # FeedPrefetcher that materializes feed rows `depth` chunks ahead on a
+    # background thread.  staleness 0 transfers at consume on the caller
+    # thread — bit-identical to the synchronous path; staleness s >= 1 lets
+    # the host→device transfer for step k+s overlap step k's computation.
+    prefetch_depth: int = 0
+    staleness: int = 0
+    prefetch_chunk: int = 8
 
 
 def combine_weighted(pairs) -> float:
@@ -267,6 +276,7 @@ def run_training(
     start_done_in_epoch: int | None = None,
     health_cb: Callable[[int], None] | None = None,
     history_sink: list | None = None,
+    batch_stream: Callable[[int, int], Any] | None = None,
 ) -> tuple[Any, list[dict]]:
     """Generic epoch loop.
 
@@ -301,6 +311,17 @@ def run_training(
     logged before the crash.  Pass a :class:`JsonlHistorySink` to make the
     rows crash-durable AND idempotent across relaunch-resumes (duplicate
     ``(epoch, step)`` rows from a re-run epoch tail are suppressed).
+
+    ``batch_stream(epoch, done) -> iterator`` decouples the step loop from
+    feed assembly: when given, each epoch's remaining batches are pulled
+    from the iterator it returns (typically a
+    :class:`repro.pipeline.prefetch.FeedPrefetcher` over the data plane's
+    ``grid_stream``) instead of ``batch_of_starts(grid[i])`` per step.  The
+    iterator must yield exactly ``steps_per_epoch - done`` device-ready
+    batches — the same values the synchronous path would build.  If it has
+    a ``close()`` it is drained on every exit from the epoch, normal or
+    not — in particular on :class:`RestartSignal`, so an elastic re-mesh
+    never leaves stale in-flight batches behind.
     """
     history: list[dict] = []
     global_step = start_step
@@ -336,33 +357,49 @@ def run_training(
             raise
 
     for epoch in range(start_epoch, loop.epochs):
-        grid = grid_of_epoch(epoch)
+        if batch_stream is None:
+            grid = grid_of_epoch(epoch)
+            steps = grid.shape[0]
+        else:
+            grid, steps = None, sampler.steps_per_epoch
         t0 = time.perf_counter()
         # Resume mid-epoch: skip steps already done.  Clamp to [0, steps] —
         # a start_step beyond this epoch (resume past a partially-logged
         # epoch with a stale start_epoch) must skip it wholesale, not index
         # with a done-count larger than the grid.
         if start_done_in_epoch is not None:
-            done_in_epoch = (min(start_done_in_epoch, grid.shape[0])
+            done_in_epoch = (min(start_done_in_epoch, steps)
                              if epoch == start_epoch else 0)
         else:
             done_in_epoch = min(
-                max(global_step - epoch * sampler.steps_per_epoch, 0),
-                grid.shape[0])
+                max(global_step - epoch * sampler.steps_per_epoch, 0), steps)
         metrics = None
-        for i in range(done_in_epoch, grid.shape[0]):
-            state, metrics = train_step(state, batch_of_starts(grid[i]))
-            global_step += 1
-            if loop.log_every and global_step % loop.log_every == 0:
-                m = {k: float(v) for k, v in metrics.items()}
-                log_row({"step": global_step, "epoch": epoch, **m})
-            if (checkpointer is not None and loop.ckpt_every
-                    and global_step % loop.ckpt_every == 0):
-                checkpointer.save(
-                    state, step=global_step,
-                    meta=epoch_meta(epoch, i + 1, grid.shape[0]))
-            if i < grid.shape[0] - 1:
-                check_health(i + 1, grid.shape[0])
+        batches = (batch_stream(epoch, done_in_epoch)
+                   if batch_stream is not None and done_in_epoch < steps
+                   else None)
+        try:
+            for i in range(done_in_epoch, steps):
+                batch = (next(batches) if batches is not None
+                         else batch_of_starts(grid[i]))
+                state, metrics = train_step(state, batch)
+                global_step += 1
+                if loop.log_every and global_step % loop.log_every == 0:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    log_row({"step": global_step, "epoch": epoch, **m})
+                if (checkpointer is not None and loop.ckpt_every
+                        and global_step % loop.ckpt_every == 0):
+                    checkpointer.save(
+                        state, step=global_step,
+                        meta=epoch_meta(epoch, i + 1, steps))
+                if i < steps - 1:
+                    check_health(i + 1, steps)
+        finally:
+            # Drain the stream on EVERY exit — epoch end, RestartSignal, or
+            # a peer-death collective error — so no prefetch thread is left
+            # pulling feeds for a topology about to be re-meshed.
+            close = getattr(batches, "close", None)
+            if close is not None:
+                close()
         if metrics is None:
             continue  # every step was already done on resume: nothing to log
         epoch_metrics = {"epoch": epoch, "epoch_time_s": time.perf_counter() - t0,
@@ -376,7 +413,7 @@ def run_training(
         # restart landing exactly on the epoch boundary would otherwise
         # abort before the summary/eval row and the resumed run — which
         # starts at the next epoch — could never emit it.
-        check_health(grid.shape[0], grid.shape[0])
+        check_health(steps, steps)
     if checkpointer is not None:
         checkpointer.save(state, step=global_step,
                           meta={"epoch": loop.epochs, "done_in_epoch": 0})

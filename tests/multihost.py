@@ -29,6 +29,11 @@ simulation:
   (``DataPlane.eval_feed``), the ragged tail is scored once replicated, and
   the window-weighted ``val_mae`` rows must come out bit-identical to the
   single-host reference — in every phase, across the kill→shrink→grow cycle;
+- the interrupted phases of the grow test run the ASYNC FEED PIPELINE at
+  ``--prefetch-depth 2 --staleness 0`` (ISSUE 6) against a synchronous
+  reference, so the bit-identity headline is also the distributed
+  staleness-0 identity — prefetched feeds drain cleanly through every
+  kill/shrink/grow re-mesh (evidence key ``prefetch_bit_identical``);
 - every phase appends to ONE crash-durable ``history.jsonl`` sink
   (leader-gated ``LeaderHistorySink`` over ``JsonlHistorySink``): after all
   three relaunches each step row and each epoch/eval row appears exactly
@@ -171,7 +176,9 @@ def _run_worker(args: argparse.Namespace) -> None:
                        seed=SEED, adam=AdamConfig(lr=1e-2),
                        loop=TrainLoopConfig(epochs=EPOCHS, log_every=1,
                                             ckpt_every=args.ckpt_every,
-                                            ckpt_dir=os.path.join(out, "ck"))),
+                                            ckpt_dir=os.path.join(out, "ck"),
+                                            prefetch_depth=args.prefetch_depth,
+                                            staleness=args.staleness)),
         elastic=elastic)
     ranks = pipe.dataplane.process_ranks
     owned.extend(ranks if ranks is not None else range(pipe.world))
@@ -358,12 +365,14 @@ def _worker_argv(*, phase: str, out: str, rank: int = 0, nprocs: int = 1,
                  world: int, batch_per_rank: int, port: int = 0,
                  elastic: bool = True, die_at: int = 0,
                  target_world: int = 0, ckpt_every: int = 1,
-                 external_coordinator: bool = False) -> list:
+                 external_coordinator: bool = False,
+                 prefetch_depth: int = 0, staleness: int = 0) -> list:
     argv = ["worker", "--phase", phase, "--out", out, "--rank", rank,
             "--nprocs", nprocs, "--coordinator-port", port,
             "--world", world, "--batch-per-rank", batch_per_rank,
             "--hb-timeout", HB_TIMEOUT, "--step-delay", STEP_DELAY,
-            "--ckpt-every", ckpt_every]
+            "--ckpt-every", ckpt_every,
+            "--prefetch-depth", prefetch_depth, "--staleness", staleness]
     if elastic:
         argv.append("--elastic")
     if external_coordinator:
@@ -379,7 +388,15 @@ def test_elastic_grow_and_resume_on_real_processes(tmp_path, free_port,
                                                    mh_spawn, results_dir):
     """Worker death → shrink → resume at the same (seed, epoch, step) →
     worker return → grow with inverse batch scaling → losses bit-identical
-    to an uninterrupted single-host run.  ~1 min, 7 subprocesses."""
+    to an uninterrupted single-host run.  ~1 min, 7 subprocesses.
+
+    Every interrupted phase runs the ASYNC FEED PIPELINE at staleness 0
+    (``--prefetch-depth 2``) while the reference stays synchronous — so the
+    bit-identity headline doubles as the distributed staleness-0 identity
+    (ISSUE 6): prefetched feeds + drain-on-remesh reproduce the synchronous
+    trajectory exactly, through the kill→shrink→grow cycle, on real
+    ``jax.distributed`` processes (evidence key ``prefetch_bit_identical``).
+    """
     ref = str(tmp_path / "ref")
     run = str(tmp_path / "run")
     os.makedirs(ref)
@@ -399,7 +416,7 @@ def test_elastic_grow_and_resume_on_real_processes(tmp_path, free_port,
     port = free_port()
     argv = dict(out=run, nprocs=FLEET, world=FLEET,
                 batch_per_rank=GLOBAL_BATCH // FLEET, port=port,
-                target_world=FLEET)
+                target_world=FLEET, prefetch_depth=2, staleness=0)
     p0 = mh_spawn(_worker_argv(phase="a", rank=0, **argv),
                   devices=1, log=os.path.join(run, "a0.log"))
     p1 = mh_spawn(_worker_argv(phase="a", rank=1, die_at=DIE_AT_STEP, **argv),
@@ -421,7 +438,8 @@ def test_elastic_grow_and_resume_on_real_processes(tmp_path, free_port,
     #      primes its poll baseline with pre-existing files).
     pb = mh_spawn(_worker_argv(phase="b", out=run, world=1,
                                batch_per_rank=GLOBAL_BATCH,
-                               target_world=FLEET),
+                               target_world=FLEET, prefetch_depth=2,
+                               staleness=0),
                   devices=2, log=os.path.join(run, "b.log"))
     # once the survivor has visibly resumed, the dead worker "returns"
     deadline = time.time() + 120
@@ -447,7 +465,7 @@ def test_elastic_grow_and_resume_on_real_processes(tmp_path, free_port,
     port_c = free_port()
     argv_c = dict(out=run, nprocs=FLEET, world=FLEET,
                   batch_per_rank=GLOBAL_BATCH // FLEET, port=port_c,
-                  target_world=FLEET)
+                  target_world=FLEET, prefetch_depth=2, staleness=0)
     c0 = mh_spawn(_worker_argv(phase="c", rank=0, **argv_c),
                   devices=1, log=os.path.join(run, "c0.log"))
     c1 = mh_spawn(_worker_argv(phase="c", rank=1, **argv_c),
@@ -500,6 +518,13 @@ def test_elastic_grow_and_resume_on_real_processes(tmp_path, free_port,
         "eval_bit_identical_to_reference": merged_evals == ref_evals,
         "val_mae_per_epoch": ref_evals,
         "durable_history_idempotent": len(d_steps) == len(set(d_steps)),
+        # ISSUE 6: phases a/b/c ran the async feed pipeline at staleness 0
+        # against a SYNCHRONOUS reference — losses and val_mae identical.
+        "prefetch_bit_identical": {
+            "prefetch_depth": 2, "staleness": 0,
+            "losses": merged == ref_losses,
+            "val_mae": merged_evals == ref_evals,
+        },
     })
 
 
@@ -707,6 +732,12 @@ def _main() -> None:
     ap.add_argument("--target-world", type=int, default=0)
     ap.add_argument("--hb-timeout", type=float, default=HB_TIMEOUT)
     ap.add_argument("--step-delay", type=float, default=STEP_DELAY)
+    ap.add_argument("--prefetch-depth", type=int, default=0,
+                    help="async feed pipeline depth (0 = synchronous); the "
+                         "grow test runs its interrupted phases pipelined "
+                         "at staleness 0 against a synchronous reference — "
+                         "the distributed staleness-0 identity (ISSUE 6)")
+    ap.add_argument("--staleness", type=int, default=0)
     ap.add_argument("--ckpt-every", type=int, default=1,
                     help="step-checkpoint cadence; 0 disables periodic "
                          "saves (the kill-rank-0 phase runs its victim "

@@ -14,6 +14,8 @@ BASE = {
     "gather_dense_us": 3000.0,
     "gather_pallas_interpret_us": 4500.0,
     "step_overhead_vs_base_pct": -4.0,
+    "step_overlap_pct": 20.0,
+    "prefetch_step_us": 550.0,
     "peak_rss_bytes": 450_000_000,
 }
 
@@ -68,6 +70,23 @@ def test_overhead_pct_compares_in_points_not_ratio():
     assert v["step_overhead_vs_base_pct"] == "fail"
     v = _verdicts(BASE, dict(BASE, step_overhead_vs_base_pct=-2.0))
     assert v["step_overhead_vs_base_pct"] == "ok"
+
+
+def test_prefetch_fields_direction_and_kind():
+    """The pipeline's overlap is higher-better in percentage POINTS (it can
+    legitimately sit near zero — or negative — on a loaded runner, where a
+    ratio would explode); the pipelined step time is an ordinary
+    lower-better latency ratio."""
+    v = _verdicts(BASE, dict(BASE, step_overlap_pct=8.0))   # -12 points
+    assert v["step_overlap_pct"] == "warn"
+    v = _verdicts(BASE, dict(BASE, step_overlap_pct=-10.0))  # -30 points
+    assert v["step_overlap_pct"] == "fail"
+    v = _verdicts(BASE, dict(BASE, step_overlap_pct=35.0))   # improvement
+    assert v["step_overlap_pct"] == "ok"
+    v = _verdicts(BASE, dict(BASE, prefetch_step_us=550.0 * 1.3))
+    assert v["prefetch_step_us"] == "fail"
+    v = _verdicts(BASE, dict(BASE, prefetch_step_us=550.0 * 0.7))
+    assert v["prefetch_step_us"] == "ok"
 
 
 def test_missing_and_nonpositive_fields_never_fail():

@@ -74,6 +74,33 @@ def test_feed_columns_reassemble_epoch_global(kind, world, batch, seed,
        world=st.integers(1, 6),
        batch=st.integers(1, 4),
        seed=st.integers(0, 2**16),
+       epoch=st.integers(0, 7),
+       start=st.integers(0, 5),
+       chunk=st.integers(1, 9),
+       halo=st.sampled_from([True, False]))
+def test_feed_stream_chunks_reassemble_feed(kind, world, batch, seed, epoch,
+                                            start, chunk, halo):
+    """The prefetch pipeline's source contract (ISSUE 6): for every sampler
+    × world × (start, chunk), ``feed_stream(rank, epoch)`` yields row blocks
+    that concatenate EXACTLY to ``feed(rank, epoch)[start:]`` — so early
+    materialization on the prefetch thread can never feed different window
+    ids than the lockstep path, for any chunking or mid-epoch resume."""
+    s = _build(kind, world, batch, seed, halo)
+    for r in range(world):
+        feed = s.feed(r, epoch)
+        blocks = list(s.feed_stream(r, epoch, start=start, chunk=chunk))
+        assert all(b.shape[1] == batch and b.shape[0] <= chunk
+                   for b in blocks)
+        rows = (np.concatenate(blocks) if blocks
+                else np.empty((0, batch), feed.dtype))
+        assert np.array_equal(rows, feed[start:])
+
+
+@settings(max_examples=60, deadline=None)
+@given(kind=st.sampled_from(SAMPLERS),
+       world=st.integers(1, 6),
+       batch=st.integers(1, 4),
+       seed=st.integers(0, 2**16),
        pool_n=st.integers(0, 40),
        halo=st.sampled_from([True, False]))
 def test_eval_feed_columns_reproduce_pool_exactly_once(kind, world, batch,
@@ -161,3 +188,37 @@ def test_dataplane_feeds_reassemble_for_every_placement(placement_i, world,
     assert np.array_equal(cols, dp.epoch_global(epoch))
     # single-process epoch_grid IS the global grid
     assert np.array_equal(dp.epoch_grid(epoch), dp.epoch_global(epoch))
+
+
+@settings(max_examples=25, deadline=None)
+@given(placement_i=st.integers(0, 2),
+       world=st.integers(1, 5),
+       batch=st.integers(1, 3),
+       epoch=st.integers(0, 3),
+       start=st.integers(0, 4),
+       chunk=st.integers(1, 9),
+       seed=st.integers(0, 999))
+def test_dataplane_grid_stream_reassembles_for_every_placement(placement_i,
+                                                               world, batch,
+                                                               epoch, start,
+                                                               chunk, seed):
+    """The stream the prefetcher actually drains: for every placement the
+    data plane supports, ``grid_stream(epoch, start=, chunk=)`` blocks must
+    reassemble to ``epoch_grid(epoch)[start:]`` — the same rows the
+    synchronous step loop would index, from any mid-epoch resume point."""
+    from repro.core import Placement
+    from repro.data import make_traffic_series
+    from repro.launch.mesh import make_host_mesh
+    from repro.pipeline import PipelineConfig, build_dataplane
+
+    placement = list(Placement)[placement_i]
+    dp = build_dataplane(
+        make_traffic_series(120, 2), WindowSpec(horizon=2, input_len=2),
+        make_host_mesh(),
+        PipelineConfig(batch_per_rank=batch, placement=placement,
+                       world=world, seed=seed))
+    grid = dp.epoch_grid(epoch)
+    blocks = list(dp.grid_stream(epoch, start=start, chunk=chunk))
+    rows = (np.concatenate(blocks) if blocks
+            else np.empty((0, grid.shape[1]), grid.dtype))
+    assert np.array_equal(rows, grid[start:])

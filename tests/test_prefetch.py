@@ -1,0 +1,266 @@
+"""Async feed prefetch pipeline (ISSUE 6): unit pins on the two-stage
+:class:`~repro.pipeline.prefetch.FeedPrefetcher` plus the end-to-end
+staleness identities through ``Engine.fit``:
+
+- the prefetcher yields ``transfer(row)`` for every feed row IN ORDER, at
+  every (depth, staleness, chunk) combination;
+- staleness 0 runs the transfer on the CALLER thread (the synchronous op
+  order — the identity's mechanism), staleness >= 1 on the transfer thread;
+- stage 1's run-ahead is bounded by ``depth`` blocks;
+- background errors surface at the consumer, ``close()`` is idempotent and
+  closes the source generator (the drain the elastic re-mesh relies on);
+- a pipelined fit at staleness 0 AND 1 is bit-identical to the synchronous
+  fit — losses and final state — including straight through an elastic
+  shrink (the in-process fault harness from test_elastic_engine);
+- the DataPlane's replicated eval-tail row is built once and cached.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Placement, WindowSpec
+from repro.data import make_traffic_series
+from repro.launch.mesh import make_host_mesh
+from repro.optim import AdamConfig
+from repro.pipeline import (ElasticConfig, FeedPrefetcher, PipelineConfig,
+                            PrefetchPlan, build_dataplane, build_pipeline)
+from repro.train import TrainLoopConfig
+
+# ---------------------------------------------------------------- PrefetchPlan
+
+
+def test_plan_defaults_and_validation():
+    plan = PrefetchPlan()
+    assert (plan.depth, plan.staleness, plan.chunk) == (2, 0, 8)
+    with pytest.raises(ValueError, match="depth"):
+        PrefetchPlan(depth=0)
+    with pytest.raises(ValueError, match="staleness"):
+        PrefetchPlan(staleness=-1)
+    with pytest.raises(ValueError, match="chunk"):
+        PrefetchPlan(chunk=0)
+
+
+# ------------------------------------------------------- FeedPrefetcher units
+
+def _blocks(n_rows: int, chunk: int, width: int = 3):
+    """A grid_stream-shaped iterator: [<=chunk, width] blocks of row ids."""
+    grid = np.arange(n_rows * width).reshape(n_rows, width)
+    for lo in range(0, n_rows, chunk):
+        yield grid[lo:lo + chunk]
+
+
+@pytest.mark.parametrize("staleness", [0, 1, 3])
+@pytest.mark.parametrize("depth,chunk", [(1, 1), (2, 4), (3, 7)])
+def test_yields_every_row_in_order(staleness, depth, chunk):
+    n_rows = 17  # deliberately not a multiple of any chunk above
+    got = list(FeedPrefetcher(
+        _blocks(n_rows, chunk), lambda row: row * 10,
+        PrefetchPlan(depth=depth, staleness=staleness, chunk=chunk)))
+    assert len(got) == n_rows
+    expect = np.arange(n_rows * 3).reshape(n_rows, 3) * 10
+    assert np.array_equal(np.stack(got), expect)
+
+
+@pytest.mark.parametrize("staleness,same_thread", [(0, True), (1, False)])
+def test_transfer_thread_matches_staleness_contract(staleness, same_thread):
+    """staleness 0 transfers on the consumer thread (the exact synchronous
+    op order — what makes the identity provable); staleness >= 1 moves the
+    transfer onto the dedicated stage-2 thread."""
+    idents = set()
+
+    def transfer(row):
+        idents.add(threading.get_ident())
+        return row
+
+    list(FeedPrefetcher(_blocks(6, 2), transfer,
+                        PrefetchPlan(staleness=staleness)))
+    assert (threading.get_ident() in idents) == same_thread
+    if not same_thread:
+        assert len(idents) == 1  # one transfer thread, not many
+
+
+def test_host_stage_runahead_bounded_by_depth():
+    """Stage 1 may hold at most ``depth`` queued blocks plus the one block
+    in its hand — consuming nothing must not materialize the whole epoch."""
+    pulled = [0]
+
+    def counting_blocks():
+        for b in _blocks(100, 1):
+            pulled[0] += 1
+            yield b
+
+    depth = 3
+    pf = FeedPrefetcher(counting_blocks(), lambda r: r,
+                        PrefetchPlan(depth=depth, staleness=0, chunk=1))
+    deadline = time.monotonic() + 2.0
+    while pulled[0] < depth + 1 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    time.sleep(0.1)  # would overshoot here if the bound were broken
+    assert pulled[0] == depth + 1
+    pf.close()
+    assert pulled[0] <= depth + 2
+
+
+@pytest.mark.parametrize("staleness", [0, 1])
+def test_source_error_surfaces_at_consumer(staleness):
+    def broken():
+        yield np.zeros((2, 3), np.int32)
+        raise RuntimeError("feed exploded")
+
+    pf = FeedPrefetcher(broken(), lambda r: r, PrefetchPlan(staleness=staleness))
+    with pytest.raises(RuntimeError, match="feed exploded"):
+        list(pf)
+
+
+def test_transfer_error_surfaces_at_consumer():
+    def bad_transfer(row):
+        raise ValueError("transfer exploded")
+
+    pf = FeedPrefetcher(_blocks(4, 2), bad_transfer, PrefetchPlan(staleness=1))
+    with pytest.raises(ValueError, match="transfer exploded"):
+        list(pf)
+
+
+@pytest.mark.parametrize("staleness", [0, 2])
+def test_close_is_idempotent_and_closes_source(staleness):
+    closed = []
+
+    def tracked():
+        try:
+            yield from _blocks(50, 2)
+        finally:
+            closed.append(True)
+
+    pf = FeedPrefetcher(tracked(), lambda r: r,
+                        PrefetchPlan(staleness=staleness))
+    next(pf)  # pipeline is live
+    pf.close()
+    pf.close()  # second drain is a no-op, not an error
+    assert closed == [True]
+    with pytest.raises(StopIteration):
+        next(pf)
+    for t in (pf._host_thread, pf._dev_thread):
+        assert t is None or not t.is_alive()
+
+
+# --------------------------------------------------- end-to-end fit identity
+
+NODES, ENTRIES, B, WORLD = 3, 120, 2, 4
+SPEC = WindowSpec(horizon=2, input_len=2)
+
+
+def _loss_fn(p, x, y):
+    pred = x[:, -1] * p["w"]
+    return jnp.mean((pred - y[:, 0]) ** 2), {}
+
+
+def _fit(depth: int, stale: int, *, placement=Placement.REPLICATED,
+         world=WORLD, chunk: int = 8):
+    pipe = build_pipeline(
+        make_traffic_series(ENTRIES, NODES), SPEC, make_host_mesh(),
+        _loss_fn, {"w": jnp.full((NODES, 2), 0.1, jnp.float32)},
+        PipelineConfig(batch_per_rank=B, placement=placement, world=world,
+                       seed=7, adam=AdamConfig(lr=1e-2),
+                       loop=TrainLoopConfig(epochs=2, log_every=1,
+                                            eval_every=0,
+                                            prefetch_depth=depth,
+                                            staleness=stale,
+                                            prefetch_chunk=chunk)))
+    state, hist = pipe.fit(eval_fn=None)
+    return state, [h["loss"] for h in hist if "loss" in h]
+
+
+@pytest.mark.parametrize("placement",
+                         [Placement.REPLICATED, Placement.PARTITIONED])
+@pytest.mark.parametrize("stale,chunk", [(0, 8), (0, 3), (1, 8), (2, 5)])
+def test_pipelined_fit_bit_identical_to_synchronous(placement, stale, chunk):
+    """The acceptance identity, in-process: at staleness 0 the pipeline is
+    bit-identical BY CONSTRUCTION (same caller-thread op order); at
+    staleness >= 1 it is still bit-identical HERE because feeds are pure and
+    the same bytes reach the same compiled program — only the timing moves."""
+    ref_state, ref_losses = _fit(0, 0, placement=placement)
+    state, losses = _fit(2, stale, placement=placement, chunk=chunk)
+    assert losses == ref_losses
+    for a, b in zip(jax.tree.leaves(ref_state), jax.tree.leaves(state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pipelined_elastic_shrink_bit_identical(tmp_path):
+    """kill→shrink with the prefetcher ON: the engine drains the in-flight
+    pipeline at the RestartSignal, re-meshes, and resumes — and the whole
+    trajectory is bit-identical to the synchronous elastic run (same fault
+    schedule, same checkpoints).  The real 2-process version of this pin is
+    tests/multihost.py's ``prefetch_bit_identical`` evidence."""
+    from tests.test_elastic_engine import OneDeadWorker
+
+    def run(tag: str, depth: int, stale: int):
+        clock = [0.0]
+        pipe = build_pipeline(
+            make_traffic_series(ENTRIES, NODES), SPEC, make_host_mesh(),
+            _loss_fn, {"w": jnp.full((NODES, 2), 0.1, jnp.float32)},
+            PipelineConfig(batch_per_rank=B, placement=Placement.REPLICATED,
+                           world=WORLD, seed=7, adam=AdamConfig(lr=1e-2),
+                           loop=TrainLoopConfig(epochs=2, log_every=1,
+                                                ckpt_dir=str(tmp_path / tag),
+                                                prefetch_depth=depth,
+                                                staleness=stale)),
+            elastic=ElasticConfig(heartbeat_timeout=50.0,
+                                  clock=lambda: clock[0],
+                                  step_feed=OneDeadWorker(clock)))
+        state, hist = pipe.fit(eval_fn=None)
+        assert len(pipe.restarts) == 1  # the fault actually fired
+        return state, [(h["step"], h["loss"]) for h in hist if "loss" in h]
+
+    ref_state, ref_losses = run("sync", 0, 0)
+    for stale in (0, 1):
+        state, losses = run(f"s{stale}", 2, stale)
+        assert losses == ref_losses
+        for a, b in zip(jax.tree.leaves(ref_state), jax.tree.leaves(state)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------- DataPlane prefetch API
+
+def _plane(world=1, placement=Placement.REPLICATED):
+    return build_dataplane(
+        make_traffic_series(ENTRIES, NODES), SPEC, make_host_mesh(),
+        PipelineConfig(batch_per_rank=B, placement=placement, world=world,
+                       seed=7))
+
+
+def test_eval_tail_batch_cached_once():
+    dp = _plane(world=4)  # val pool 12, global batch 8 -> ragged tail of 4
+    n, batch = dp.eval_tail_batch("val")
+    assert n == len(dp.eval_tail("val")) and n > 0
+    assert np.array_equal(
+        np.asarray(batch), np.asarray(
+            dp.batch_of_starts(dp.eval_tail("val"), replicate=True)))
+    n2, batch2 = dp.eval_tail_batch("val")
+    assert n2 == n and batch2 is batch  # the cached row, not a rebuild
+
+
+def test_prefetch_transfer_selects_mode():
+    dp = _plane()
+    assert dp.prefetch_transfer(0) == dp.batch_of_starts
+    if dp.can_defer_transfer():
+        assert dp.prefetch_transfer(1) == dp.host_batch_of_starts
+        row = dp.epoch_global(0)[0]
+        # deferred mode: host bytes equal the committed device batch's bytes
+        assert np.array_equal(dp.host_batch_of_starts(row),
+                              np.asarray(dp.batch_of_starts(row)))
+    sharded = _plane(world=2, placement=Placement.PARTITIONED)
+    if not sharded.can_defer_transfer():
+        assert sharded.prefetch_transfer(1) == sharded.batch_of_starts
+
+
+def test_grid_stream_resumes_mid_epoch():
+    """grid_stream(start=k) is the suffix the engine consumes after an
+    elastic resume lands mid-epoch."""
+    dp = _plane(world=2)
+    grid = dp.epoch_grid(3)
+    rows = np.concatenate(list(dp.grid_stream(3, start=2, chunk=3)))
+    assert np.array_equal(rows, grid[2:])
