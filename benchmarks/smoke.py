@@ -2,12 +2,14 @@
 
 Runs the fig7 (distributed-index scaling) and table3 (index vs standard
 batching) benchmarks in ``--smoke`` mode (tiny synthetic data, same code
-paths) plus a window-gather microbench (dense jnp vs Pallas interpret), and
-serialises everything to ``BENCH_smoke.json``:
+paths) plus a window-gather microbench (jitted dense jnp vs Pallas interpret
+vs the measured ``auto`` dispatch), and serialises everything to
+``BENCH_smoke.json``:
 
 - ``headline``: the few numbers a trend line wants — tokens/s through the
-  fused gather/step, gather microseconds for the ``dense`` and
-  ``pallas``-interpret lowerings, the async-feed-pipeline overlap
+  fused gather/step, gather microseconds for the ``dense``,
+  ``pallas``-interpret and autotuned ``auto`` lowerings, the
+  async-feed-pipeline overlap
   (``step_overlap_pct`` / ``prefetch_step_us``, with the staleness-0
   bit-identity asserted on every run), peak RSS of the whole run;
 - ``rows``: every ``name,value,unit,detail`` record the suites printed, so
@@ -40,25 +42,64 @@ from repro.kernels import window_gather, window_gather_ref
 
 def _gather_microbench() -> None:
     """Window gather at a reduced PeMS-like shape: the hot path of
-    index-batching, timed for the dense lowering and checked+timed for the
-    Pallas kernel in interpret mode."""
+    index-batching.  All three arms are JITTED before timing — eager wall
+    time is dominated by per-op Python dispatch and says nothing about the
+    lowering (the pallas arm used to be timed eagerly, which buried the
+    comparison under interpreter overhead):
+
+    - ``dense``  — jit of the pure-jnp reference;
+    - ``pallas`` — jit of the scalar-prefetch kernel (interpret mode on
+      CPU; not TPU perf);
+    - ``auto``   — jit of the measured dispatcher (kernels/autotune):
+      dispatch fires at TRACE time exactly like the fused train step, so
+      the steady state runs the tuned winner with zero dispatch overhead.
+    """
+    import functools
+    import statistics
+
+    from repro.kernels import verdict_for
+
     rng = np.random.default_rng(0)
     series = jnp.asarray(rng.standard_normal((512, 64)).astype(np.float32))
     starts = jnp.asarray(rng.integers(0, 480, 16).astype(np.int32))
-    t_dense = timed(lambda: window_gather_ref(series, starts, span=24))
-    row("smoke/gather_dense_us", f"{1e6 * t_dense:.0f}", "us",
-        "[512,64] b=16 span=24, jnp dense lowering")
-    t_pallas = timed(
-        lambda: window_gather(series, starts, span=24, use_pallas=True),
-        iters=1)
-    row("smoke/gather_pallas_interpret_us", f"{1e6 * t_pallas:.0f}", "us",
-        "same shape, Pallas kernel in interpret mode (CPU; not TPU perf)")
-    ok = np.array_equal(
-        np.asarray(window_gather(series, starts, span=24, use_pallas=True)),
-        np.asarray(window_gather_ref(series, starts, span=24)))
-    row("smoke/gather_pallas_matches_dense", int(ok), "bool", "")
-    if not ok:
+    dense = jax.jit(window_gather_ref, static_argnames=("span",))
+    pallas = jax.jit(functools.partial(window_gather, use_pallas=True),
+                     static_argnames=("span",))
+    auto = jax.jit(functools.partial(window_gather, impl="auto"),
+                   static_argnames=("span",))
+    # dense and auto often lower to the SAME graph (the tuner picks ref);
+    # at the ~10µs scale an A-then-B comparison is pure scheduler jitter,
+    # so the two arms are interleaved and compared by round medians.
+    rounds, dense_ts, auto_ts = 5, [], []
+    for _ in range(rounds):
+        dense_ts.append(timed(lambda: dense(series, starts, span=24),
+                              iters=5))
+        auto_ts.append(timed(lambda: auto(series, starts, span=24), iters=5))
+    t_dense = statistics.median(dense_ts)
+    t_auto = statistics.median(auto_ts)
+    row("smoke/gather_dense_us", f"{1e6 * t_dense:.1f}", "us",
+        "[512,64] b=16 span=24, jit of the jnp dense lowering, median of "
+        f"{rounds} interleaved rounds")
+    t_pallas = timed(lambda: pallas(series, starts, span=24))
+    row("smoke/gather_pallas_interpret_us", f"{1e6 * t_pallas:.1f}", "us",
+        "same shape, jit of the Pallas kernel in interpret mode (CPU; "
+        "not TPU perf)")
+    v = verdict_for("window_gather", np.asarray(series), np.asarray(starts),
+                    span=24)
+    row("smoke/gather_auto_us", f"{1e6 * t_auto:.1f}", "us",
+        f"same shape, autotuned dispatch -> {v.variant} ({v.source}), "
+        f"median of {rounds} interleaved rounds")
+    ok_pallas = np.array_equal(np.asarray(pallas(series, starts, span=24)),
+                               np.asarray(dense(series, starts, span=24)))
+    ok_auto = np.array_equal(np.asarray(auto(series, starts, span=24)),
+                             np.asarray(dense(series, starts, span=24)))
+    row("smoke/gather_pallas_matches_dense", int(ok_pallas), "bool", "")
+    row("smoke/gather_auto_matches_dense", int(ok_auto), "bool",
+        f"variant={v.variant}")
+    if not ok_pallas:
         raise SystemExit("pallas gather diverged from the dense lowering")
+    if not ok_auto:
+        raise SystemExit("autotuned gather diverged from the dense lowering")
 
 
 def _prefetch_bench(staleness: int) -> None:
@@ -165,7 +206,18 @@ def main(argv=None) -> None:
     ap.add_argument("--staleness", type=int, default=1,
                     help="staleness of the TIMED prefetch arm (the "
                          "staleness-0 bit-identity arm always runs)")
+    ap.add_argument("--autotune", choices=("off", "load", "tune"),
+                    default="load",
+                    help="kernel autotune policy for the 'auto' arms: off = "
+                         "static defaults, load = use the committed "
+                         "TUNING_<backend>.json, tune = measure and persist "
+                         "fresh verdicts")
+    ap.add_argument("--tuning-dir", default="results",
+                    help="directory holding TUNING_<backend>.json")
     args = ap.parse_args(argv)
+
+    from repro.kernels import set_autotune
+    set_autotune(mode=args.autotune, cache_dir=args.tuning_dir)
 
     t0 = time.perf_counter()
     print("name,value,unit,detail")
@@ -185,12 +237,14 @@ def main(argv=None) -> None:
         "jax": jax.__version__,
         "backend": jax.default_backend(),
         "devices": len(jax.devices()),
+        "autotune": args.autotune,
         "wall_s": round(wall, 2),
         "headline": {
             "tokens_per_s": tokens,
             "gather_dense_us": _pick(records, "smoke/gather_dense_us"),
             "gather_pallas_interpret_us": _pick(
                 records, "smoke/gather_pallas_interpret_us"),
+            "gather_auto_us": _pick(records, "smoke/gather_auto_us"),
             "step_overhead_vs_base_pct": round(
                 100 * (_pick(records, "table3/step_index")
                        / _pick(records, "table3/step_base") - 1), 1),

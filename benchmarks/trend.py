@@ -1,8 +1,9 @@
-"""Perf-trend gate over successive ``BENCH_smoke.json`` artifacts.
+"""Perf-trend gate over successive bench artifacts.
 
-``benchmarks/smoke.py`` records one perf point per push; this module closes
+``benchmarks/smoke.py`` (BENCH_smoke.json) and ``benchmarks/kernels_bench.py``
+(BENCH_kernels.json) each record one perf point per push; this module closes
 the ROADMAP loop by COMPARING two points: CI downloads the previous run's
-``bench-smoke`` artifact and gates the current one against it —
+artifact and gates the current one against it —
 
     python -m benchmarks.trend --prev prev/BENCH_smoke.json \
                                --cur results/BENCH_smoke.json
@@ -31,11 +32,17 @@ import argparse
 import json
 import sys
 
-#: headline field -> (better direction, comparison kind)
+#: headline field -> (better direction, comparison kind).  The table covers
+#: BOTH artifact kinds (bench-smoke and bench-kernels); fields absent from a
+#: record compare as "missing", which never fails, so one table gates both.
 HEADLINE_FIELDS: dict[str, tuple[str, str]] = {
     "tokens_per_s": ("higher", "ratio"),
     "gather_dense_us": ("lower", "ratio"),
     "gather_pallas_interpret_us": ("lower", "ratio"),
+    # Measured kernel autotuning (ISSUE 7): the dispatcher's pick must stay
+    # competitive — gather_auto_us drifting up means either the tuner started
+    # picking losers or the dispatch path grew overhead.
+    "gather_auto_us": ("lower", "ratio"),
     "step_overhead_vs_base_pct": ("lower", "points"),
     # Async feed pipeline (ISSUE 6): the measured overlap win.  Losing it —
     # overlap points falling, pipelined step time rising — is a regression
@@ -43,6 +50,13 @@ HEADLINE_FIELDS: dict[str, tuple[str, str]] = {
     "step_overlap_pct": ("higher", "points"),
     "prefetch_step_us": ("lower", "ratio"),
     "peak_rss_bytes": ("lower", "ratio"),
+    # bench-kernels (BENCH_kernels.json) headline: what the auto dispatcher
+    # actually runs per op, jitted steady state.
+    "gather_slice_us": ("lower", "ratio"),
+    "window_gather_auto_us": ("lower", "ratio"),
+    "linear_scan_auto_us": ("lower", "ratio"),
+    "flash_attention_auto_us": ("lower", "ratio"),
+    "diffusion_conv_auto_us": ("lower", "ratio"),
 }
 
 
@@ -58,6 +72,10 @@ def compare_headlines(prev: dict, cur: dict, *, warn: float = 0.10,
     rows = []
     for field, (direction, kind) in HEADLINE_FIELDS.items():
         p, c = prev.get(field), cur.get(field)
+        if p is None and c is None:
+            # the field belongs to the OTHER artifact kind (one table gates
+            # both bench-smoke and bench-kernels records) — no row at all
+            continue
         if p is None or c is None:
             rows.append({"field": field, "prev": p, "cur": c,
                          "regression": None, "verdict": "missing"})
@@ -86,7 +104,7 @@ def _load_headline(path: str) -> dict:
         record = json.load(f)
     headline = record.get("headline")
     if not isinstance(headline, dict):
-        raise SystemExit(f"{path}: no 'headline' object — not a bench-smoke "
+        raise SystemExit(f"{path}: no 'headline' object — not a bench "
                          f"record?")
     return headline
 

@@ -5,6 +5,8 @@ jit'd public wrapper with padding/dispatch) and ref.py (pure-jnp oracle the
 tests sweep against).  On this CPU container kernels run in interpret mode;
 on TPU the same call sites get the compiled kernel.
 """
+from repro.kernels.autotune import (autotune_policy, autotuning, dispatch,
+                                    reset_autotune, set_autotune, verdict_for)
 from repro.kernels.diffusion_conv.ops import diffusion_conv
 from repro.kernels.diffusion_conv.ref import diffusion_conv_ref
 from repro.kernels.flash_attention.ops import flash_attention
@@ -19,4 +21,6 @@ __all__ = [
     "flash_attention", "flash_attention_ref",
     "linear_scan", "linear_scan_ref",
     "window_gather", "window_gather_ref", "gather_xy",
+    "autotune_policy", "autotuning", "dispatch", "reset_autotune",
+    "set_autotune", "verdict_for",
 ]

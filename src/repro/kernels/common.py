@@ -84,3 +84,14 @@ def interpret_on_cpu(backend: str | None = None) -> bool:
     ``kernel_defaults(backend).interpret``.
     """
     return kernel_defaults(backend).interpret
+
+
+def block_candidates(base: int, *, lo: int = 32,
+                     hi: int = 4096) -> tuple[int, ...]:
+    """The autotuner's block-size search space around a ``KernelDefaults``
+    base tile: ``{base/2, base, base*2}`` clamped to ``[lo, hi]``, sorted and
+    deduped (e.g. ``block_q=256 -> (128, 256, 512)``).  Small by design — the
+    measured dispatcher (:mod:`repro.kernels.autotune`) times every candidate
+    under jit, so the space must stay cheap to sweep."""
+    return tuple(sorted({min(max(b, lo), hi)
+                         for b in (base // 2, base, base * 2)}))

@@ -30,12 +30,23 @@ def diffusion_conv(
     use_pallas: bool = False,
     block_n: int | None = None,
     backend: str | None = None,
+    impl: str | None = None,
 ):
     """x: [B, N, C] -> [B, N, H].  See ref.py for the weight layout.
 
     Tiling/interpret defaults resolve per call from ``backend`` (None =
-    ambient, read now).
+    ambient, read now).  ``impl`` overrides ``use_pallas``:
+    ``"ref"``/``"pallas"`` force a lowering, ``"auto"`` routes through the
+    measured dispatcher (:mod:`repro.kernels.autotune`).
     """
+    if impl == "auto":
+        from repro.kernels.autotune import dispatch
+        return dispatch("diffusion_conv", x, tuple(supports), w, b,
+                        k_hops=k_hops, n_supports=len(supports))
+    if impl is not None:
+        if impl not in ("ref", "pallas"):
+            raise ValueError(f"impl {impl!r}; expected ref|pallas|auto")
+        use_pallas = impl == "pallas"
     if not use_pallas:
         return diffusion_conv_ref(x, supports, w, b, k_hops=k_hops)
 

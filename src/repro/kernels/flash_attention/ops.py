@@ -9,12 +9,21 @@ from repro.kernels.flash_attention.ref import flash_attention_ref
 
 def flash_attention(q, k, v, *, causal: bool = True, use_pallas: bool = False,
                     block_q: int | None = None, block_k: int | None = None,
-                    backend: str | None = None):
+                    backend: str | None = None, impl: str | None = None):
     """q: [B, S, H, D]; k/v: [B, S, Hkv, D] -> [B, S, H, D] (model layout).
 
     Tiling/interpret defaults resolve per call from ``backend`` (None =
-    ambient, read now).
+    ambient, read now).  ``impl`` overrides ``use_pallas``:
+    ``"ref"``/``"pallas"`` force a lowering, ``"auto"`` routes through the
+    measured dispatcher (:mod:`repro.kernels.autotune`).
     """
+    if impl == "auto":
+        from repro.kernels.autotune import dispatch
+        return dispatch("flash_attention", q, k, v, causal=causal)
+    if impl is not None:
+        if impl not in ("ref", "pallas"):
+            raise ValueError(f"impl {impl!r}; expected ref|pallas|auto")
+        use_pallas = impl == "pallas"
     qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)

@@ -15,15 +15,26 @@ def linear_scan(
     use_pallas: bool = False,
     chunk: int | None = None,
     backend: str | None = None,
+    impl: str | None = None,
 ):
     """h_t = a_t*h_{t-1} + b_t.  a/b: [B, S, D], h0: [B, D] (zeros if None).
 
     Returns (h_seq [B, S, D], h_last [B, D]).  Tiling/interpret defaults
-    resolve per call from ``backend`` (None = ambient, read now).
+    resolve per call from ``backend`` (None = ambient, read now).  ``impl``
+    overrides ``use_pallas``: ``"ref"``/``"pallas"`` force a lowering,
+    ``"auto"`` routes through the measured dispatcher
+    (:mod:`repro.kernels.autotune`).
     """
     bsz, s, d = a.shape
     if h0 is None:
         h0 = jnp.zeros((bsz, d), a.dtype)
+    if impl == "auto":
+        from repro.kernels.autotune import dispatch
+        return dispatch("linear_scan", a, b, h0)
+    if impl is not None:
+        if impl not in ("ref", "pallas"):
+            raise ValueError(f"impl {impl!r}; expected ref|pallas|auto")
+        use_pallas = impl == "pallas"
     if not use_pallas:
         return linear_scan_ref(a, b, h0)
 

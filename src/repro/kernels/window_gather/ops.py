@@ -22,12 +22,24 @@ def window_gather(
     use_pallas: bool = False,
     block_c: int | None = None,
     backend: str | None = None,
+    impl: str | None = None,
 ) -> jnp.ndarray:
     """series: [T, ...], starts: [B] -> [B, span, ...].
 
     Tiling/interpret defaults resolve per call from ``backend`` (None = the
-    ambient ``jax.default_backend()``, read now — never cached).
+    ambient ``jax.default_backend()``, read now — never cached).  ``impl``
+    overrides ``use_pallas``: ``"ref"`` / ``"pallas"`` force a lowering,
+    ``"auto"`` routes through the measured shape-bucketed dispatcher
+    (:mod:`repro.kernels.autotune`), which picks the fastest VERIFIED
+    variant for this (backend, shape-bucket).
     """
+    if impl == "auto":
+        from repro.kernels.autotune import dispatch
+        return dispatch("window_gather", series, starts, span=span)
+    if impl is not None:
+        if impl not in ("ref", "pallas"):
+            raise ValueError(f"impl {impl!r}; expected ref|pallas|auto")
+        use_pallas = impl == "pallas"
     if not use_pallas:
         return window_gather_ref(series, starts, span=span)
 

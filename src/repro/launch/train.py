@@ -294,7 +294,19 @@ def main() -> None:
                     choices=[p.value for p in Placement],
                     help="ST-GNN dataset placement (pipeline)")
     ap.add_argument("--gather", default="slice",
-                    choices=["slice", "take", "fused", "pallas"])
+                    choices=["slice", "take", "fused", "pallas", "auto"],
+                    help="window-gather lowering fused into the train step; "
+                         "'auto' dispatches per (backend, shape-bucket) "
+                         "through the measured tuning cache (see --autotune)")
+    ap.add_argument("--autotune", default="load",
+                    choices=["off", "load", "tune"],
+                    help="kernel autotune policy for backend='auto' dispatch: "
+                         "'off' = static per-backend defaults, 'load' = use "
+                         "results/TUNING_<backend>.json when a verdict covers "
+                         "the shape bucket (never measures), 'tune' = measure "
+                         "candidates on a cache miss and persist the verdict")
+    ap.add_argument("--tuning-dir", default="results",
+                    help="directory holding TUNING_<backend>.json")
     ap.add_argument("--shuffle", default="global", choices=["global", "local-batch"],
                     help="LM sampler (ST-GNN samplers follow --placement)")
     ap.add_argument("--ckpt-dir", default=None)
@@ -371,6 +383,12 @@ def main() -> None:
                          "relaunch re-running an epoch tail are suppressed "
                          "(idempotent resume).  Process 0 writes it")
     args = ap.parse_args()
+    # Set the autotune policy before anything builds a pipeline: 'auto'
+    # dispatch resolves per call, so this only configures WHERE verdicts come
+    # from — it never touches the backend (jax.distributed.initialize() below
+    # must still run first against an untouched client).
+    from repro.kernels.autotune import set_autotune
+    set_autotune(mode=args.autotune, cache_dir=args.tuning_dir)
     if args.heartbeat and not args.elastic:
         # Silently ignoring the transport would leave the operator believing
         # health monitoring is active when nothing emits or collects beats.

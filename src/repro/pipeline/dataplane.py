@@ -54,7 +54,7 @@ class PipelineConfig:
 
     batch_per_rank: int = 8
     placement: Placement = Placement.REPLICATED
-    gather: str = "slice"  # slice | take | fused | pallas | lm
+    gather: str = "slice"  # slice | take | fused | pallas | auto | lm
     seed: int = 0
     # Worker count for the sampler.  None = the mesh's data-parallel size;
     # benchmarks override it to simulate w lock-step SPMD workers on a small

@@ -10,6 +10,12 @@ results, different lowerings:
 - ``fused``  — one gather of the whole span, split into (x, y).
 - ``pallas`` — the fused span gather through the scalar-prefetch Pallas
   kernel (``kernels/window_gather``).
+- ``auto``   — measured dispatch (``kernels/autotune``): the fastest of the
+  above for this (backend, shape-bucket), from the persisted tuning cache
+  (``results/TUNING_<backend>.json``) or a live measurement under
+  ``--autotune tune``; falls back to the static per-backend default when no
+  verdict covers the bucket.  Every variant is bit-identical, so ``auto``
+  only ever changes speed, never values.
 - ``lm``     — token-stream windows (``core.batching.lm_window_batch``):
   the one contract deviation — y is x shifted by one inside the same span
   (``x: [B, input_len]``, ``y: [B, input_len]``), so ``horizon`` only sets
@@ -35,11 +41,27 @@ def lm_gather(series, starts, *, input_len: int, horizon: int):
     return lm_window_batch(series, starts, seq_len=input_len)
 
 
+def gather_batch_auto(series, starts, *, input_len: int, horizon: int):
+    """Measured dispatch through the shape-bucketed autotuner.
+
+    Resolution happens per call (the backend is read NOW, the verdict is
+    keyed by it), so the same training step picks the CPU verdict on the
+    CPU container and the TPU verdict on a slice.  The candidate set is
+    exactly the named variants above — all bit-identical — so the dispatch
+    decision can never change training values.
+    """
+    from repro.kernels.autotune import dispatch
+
+    return dispatch("gather", series, starts, input_len=input_len,
+                    horizon=horizon)
+
+
 GATHERS: dict[str, Callable] = {
     "slice": gather_batch,
     "take": gather_batch_take,
     "fused": gather_batch_fused,
     "pallas": functools.partial(gather_batch_fused, use_pallas=True),
+    "auto": gather_batch_auto,
     "lm": lm_gather,
 }
 

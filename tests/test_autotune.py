@@ -1,0 +1,190 @@
+"""Autotune dispatcher: bucketing, cache robustness, mode semantics.
+
+The tuning cache is an OPTIONAL artifact: a missing, truncated, corrupt or
+foreign-backend ``TUNING_<backend>.json`` must never crash dispatch — the
+worst legal outcome is the static per-backend default.  These tests torture
+exactly that contract: torn files at arbitrary byte offsets, concurrent
+writers, stale variant names, caches tuned for another backend.
+"""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.kernels.autotune import (autotuning, bucket_key, cache_path,
+                                    dispatch, load_cache, pow2_bucket,
+                                    reset_autotune, save_cache, set_autotune,
+                                    verdict_for)
+from repro.kernels.window_gather.ref import window_gather_ref
+
+
+@pytest.fixture(autouse=True)
+def _clean_policy():
+    reset_autotune()
+    yield
+    reset_autotune()
+
+
+def _wg_args(t=64, c=8, b=4, span=6):
+    rng = np.random.default_rng(0)
+    series = rng.standard_normal((t, c)).astype(np.float32)
+    starts = rng.integers(0, t - span + 1, b).astype(np.int32)
+    return series, starts, span
+
+
+# ------------------------------------------------------------ shape bucketing
+def test_pow2_bucket_envelopes():
+    assert [pow2_bucket(n) for n in (0, 1, 2, 3, 5, 16, 17, 1000)] == \
+        [1, 1, 2, 4, 8, 16, 32, 1024]
+
+
+def test_bucket_key_is_stable_and_backend_scoped():
+    k = bucket_key("window_gather", "cpu", {"t": 512, "c": 64}, np.float32)
+    assert k == "window_gather|cpu|t=512,c=64|float32"
+    assert bucket_key("window_gather", "tpu", {"t": 512, "c": 64},
+                      np.float32) != k
+
+
+def test_same_bucket_shares_one_verdict(tmp_path):
+    """Shapes inside one power-of-two envelope resolve to the same entry."""
+    with autotuning(mode="tune", cache_dir=str(tmp_path), warmup=0, iters=1):
+        s1, st1, span = _wg_args(t=40, c=8)
+        s2, st2, _ = _wg_args(t=60, c=7)
+        dispatch("window_gather", s1, st1, span=span)
+        n_after_first = len(load_cache(cache_path("cpu", str(tmp_path)),
+                                       "cpu"))
+        dispatch("window_gather", s2, st2, span=span)
+        n_after_second = len(load_cache(cache_path("cpu", str(tmp_path)),
+                                        "cpu"))
+    assert n_after_first == n_after_second == 1
+
+
+# --------------------------------------------------------------- persistence
+def test_cache_round_trip(tmp_path):
+    path = cache_path("cpu", str(tmp_path))
+    entries = {"op|cpu|t=64|float32": {"variant": "ref", "params": {},
+                                       "us": 1.5}}
+    save_cache(path, "cpu", entries)
+    assert load_cache(path, "cpu") == entries
+
+
+def test_save_merges_with_existing_entries(tmp_path):
+    path = cache_path("cpu", str(tmp_path))
+    save_cache(path, "cpu", {"a|cpu|t=1|f32": {"variant": "x", "params": {}}})
+    save_cache(path, "cpu", {"b|cpu|t=2|f32": {"variant": "y", "params": {}}})
+    got = load_cache(path, "cpu")
+    assert set(got) == {"a|cpu|t=1|f32", "b|cpu|t=2|f32"}
+
+
+def test_missing_cache_loads_empty(tmp_path):
+    assert load_cache(cache_path("cpu", str(tmp_path)), "cpu") == {}
+
+
+def test_torn_cache_at_any_offset_loads_empty(tmp_path):
+    """A write torn at ANY byte offset (or trailing garbage) never raises."""
+    path = cache_path("cpu", str(tmp_path))
+    save_cache(path, "cpu", {"op|cpu|t=64|float32": {
+        "variant": "ref", "params": {"block": 128}, "us": 1.5}})
+    blob = open(path, "rb").read()
+    full = load_cache(path, "cpu")
+    assert full
+    for cut in range(0, len(blob), max(1, len(blob) // 40)):
+        with open(path, "wb") as f:
+            f.write(blob[:cut])
+        got = load_cache(path, "cpu")  # must not raise
+        assert got == {} or got == full
+    for garbage in (b"{not json", b"\x00\xff" * 10, b"[1, 2, 3]",
+                    b'{"entries": 7}', blob + b"trailing"):
+        with open(path, "wb") as f:
+            f.write(garbage)
+        assert load_cache(path, "cpu") == {}
+
+
+def test_foreign_backend_cache_ignored(tmp_path):
+    """A cache tuned on one backend must not steer another's dispatch —
+    the file-level backend stamp gates the load."""
+    path = cache_path("cpu", str(tmp_path))
+    save_cache(path, "tpu", {"op|tpu|t=64|float32": {"variant": "pallas",
+                                                     "params": {}}})
+    assert load_cache(path, "cpu") == {}
+    assert load_cache(path, "tpu") != {}
+
+
+def test_concurrent_writers_never_corrupt(tmp_path):
+    """N racing writers: the file must parse as a valid cache after every
+    interleaving, and every surviving entry must be exactly what its writer
+    wrote (atomic replace — no torn merges)."""
+    path = cache_path("cpu", str(tmp_path))
+    written = {f"op{i}|cpu|t=64|float32": {"variant": "ref", "params": {},
+                                           "us": float(i)}
+               for i in range(16)}
+    threads = [threading.Thread(
+        target=save_cache, args=(path, "cpu", {k: v}))
+        for k, v in written.items()]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    got = load_cache(path, "cpu")
+    assert got  # at least the last writer's entry survived
+    for key, entry in got.items():
+        assert entry == written[key]
+    with open(path) as f:
+        raw = json.load(f)  # the file itself is intact JSON
+    assert raw["backend"] == "cpu"
+
+
+# ------------------------------------------------------------- mode semantics
+def test_mode_off_uses_static_default():
+    series, starts, span = _wg_args()
+    with autotuning(mode="off"):
+        v = verdict_for("window_gather", series, starts, span=span)
+    assert v.source == "default"
+
+
+def test_mode_load_without_cache_falls_back_to_default(tmp_path):
+    series, starts, span = _wg_args()
+    with autotuning(mode="load", cache_dir=str(tmp_path)):
+        v = verdict_for("window_gather", series, starts, span=span)
+        out = dispatch("window_gather", series, starts, span=span)
+    assert v.source == "default"
+    assert np.array_equal(np.asarray(out),
+                          np.asarray(window_gather_ref(series, starts,
+                                                       span=span)))
+
+
+def test_tune_persists_and_load_reads_back(tmp_path):
+    series, starts, span = _wg_args()
+    with autotuning(mode="tune", cache_dir=str(tmp_path), warmup=0, iters=1):
+        tuned = verdict_for("window_gather", series, starts, span=span)
+    assert tuned.source == "tuned"
+    assert os.path.exists(cache_path("cpu", str(tmp_path)))
+    # a fresh "load" policy (fresh memos) reads the persisted verdict
+    with autotuning(mode="load", cache_dir=str(tmp_path)):
+        loaded = verdict_for("window_gather", series, starts, span=span)
+    assert loaded.source == "cache"
+    assert loaded.variant == tuned.variant
+    assert loaded.params == tuned.params
+
+
+def test_stale_cached_variant_falls_back_cleanly(tmp_path):
+    """A cache naming a variant that no longer exists (older registry
+    revision) must dispatch the default, not crash."""
+    series, starts, span = _wg_args()
+    key = bucket_key("window_gather", "cpu",
+                     {"t": series.shape[0], "c": series.shape[1],
+                      "b": len(starts), "span": span}, series.dtype)
+    save_cache(cache_path("cpu", str(tmp_path)), "cpu",
+               {key: {"variant": "does_not_exist", "params": {}}})
+    with autotuning(mode="load", cache_dir=str(tmp_path)):
+        out = dispatch("window_gather", series, starts, span=span)
+    assert np.array_equal(np.asarray(out),
+                          np.asarray(window_gather_ref(series, starts,
+                                                       span=span)))
+
+
+def test_set_autotune_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        set_autotune(mode="sometimes")

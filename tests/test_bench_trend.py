@@ -13,10 +13,22 @@ BASE = {
     "tokens_per_s": 1_000_000.0,
     "gather_dense_us": 3000.0,
     "gather_pallas_interpret_us": 4500.0,
+    "gather_auto_us": 2900.0,
     "step_overhead_vs_base_pct": -4.0,
     "step_overlap_pct": 20.0,
     "prefetch_step_us": 550.0,
     "peak_rss_bytes": 450_000_000,
+}
+
+# The bench-kernels (BENCH_kernels.json) headline: same gate table, other
+# artifact kind.
+KBASE = {
+    "gather_auto_us": 12.0,
+    "gather_slice_us": 15.0,
+    "window_gather_auto_us": 10.0,
+    "linear_scan_auto_us": 130.0,
+    "flash_attention_auto_us": 2900.0,
+    "diffusion_conv_auto_us": 155.0,
 }
 
 
@@ -100,8 +112,15 @@ def test_missing_and_nonpositive_fields_never_fail():
 
 
 def test_every_headline_field_is_covered():
-    assert set(HEADLINE_FIELDS) == set(BASE)
+    """One gate table spans BOTH artifact kinds; a field present in neither
+    record (it belongs to the other kind) emits no row at all, so a
+    bench-smoke pair is never polluted by bench-kernels 'missing' rows."""
+    assert set(HEADLINE_FIELDS) == set(BASE) | set(KBASE)
     assert len(compare_headlines(BASE, BASE)) == len(BASE)
+    assert len(compare_headlines(KBASE, KBASE)) == len(KBASE)
+    assert set(_verdicts(KBASE, KBASE).values()) == {"ok"}
+    v = _verdicts(KBASE, dict(KBASE, gather_auto_us=12.0 * 1.3))
+    assert v["gather_auto_us"] == "fail"
 
 
 # --------------------------------------------------------------- CLI contract

@@ -124,3 +124,112 @@ def test_diffusion_conv_grad_flows():
 
     g = jax.grad(loss)(w)
     assert np.isfinite(np.asarray(g)).all()
+
+
+# ------------------------------------------------------------- auto dispatch
+# ``impl="auto"`` routes through the measured dispatcher
+# (repro.kernels.autotune).  Two identity contracts hold on CPU:
+#  - mode="off": the static default on an interpret backend is the reference
+#    lowering, so auto is bit-identical to ref for every op;
+#  - mode="tune" for exact ops (window_gather is pure data movement): the
+#    tuner's admission check rejects any candidate whose values differ from
+#    the reference, so bit-identity holds no matter which candidate wins.
+
+import tempfile  # noqa: E402
+
+from repro.kernels import flash_attention  # noqa: E402
+from repro.kernels.autotune import autotuning  # noqa: E402
+
+
+@given(t=st.integers(12, 64), c=st.integers(1, 24), span=st.integers(2, 8),
+       b=st.integers(1, 6))
+@settings(max_examples=15, deadline=None)
+def test_window_gather_auto_bit_identical_when_tuned(t, c, span, b):
+    span = min(span, t - 1)
+    rng = np.random.default_rng(t * 131 + c)
+    series = rng.standard_normal((t, c)).astype(np.float32)
+    starts = rng.integers(0, t - span + 1, size=b).astype(np.int32)
+    ref = window_gather_ref(jnp.asarray(series), jnp.asarray(starts),
+                            span=span)
+    with tempfile.TemporaryDirectory() as tmp:
+        with autotuning(mode="tune", cache_dir=tmp, warmup=0, iters=1):
+            out = window_gather(jnp.asarray(series), jnp.asarray(starts),
+                                span=span, impl="auto")
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+@given(t=st.integers(16, 64), c=st.integers(1, 16), b=st.integers(1, 5),
+       s=st.integers(4, 24), d=st.sampled_from([4, 16, 33]),
+       n=st.sampled_from([8, 24]))
+@settings(max_examples=15, deadline=None)
+def test_auto_dispatch_off_mode_bit_identical_all_ops(t, c, b, s, d, n):
+    """auto's candidates run under jit, so the identity contract is jitted
+    auto vs jitted ref — eager float math fuses differently and may differ
+    in the last ulp."""
+    import functools
+
+    rng = np.random.default_rng(t * 7 + c * 3 + s)
+    with autotuning(mode="off"):
+        # window_gather: [t, c], b windows of span 5
+        span = min(5, t - 1)
+        series = jnp.asarray(rng.standard_normal((t, c)).astype(np.float32))
+        starts = jnp.asarray(
+            rng.integers(0, t - span + 1, b).astype(np.int32))
+        wg = jax.jit(window_gather, static_argnames=("span", "impl"))
+        assert np.array_equal(
+            np.asarray(wg(series, starts, span=span, impl="auto")),
+            np.asarray(wg(series, starts, span=span, impl="ref")))
+        # linear_scan: [b, s, d]
+        a = jnp.asarray(rng.uniform(0.7, 1.0, (b, s, d)).astype(np.float32))
+        bb = jnp.asarray(rng.standard_normal((b, s, d)).astype(np.float32))
+        ls = jax.jit(linear_scan, static_argnames=("impl",))
+        for auto_leaf, ref_leaf in zip(ls(a, bb, impl="auto"),
+                                       ls(a, bb, impl="ref")):
+            assert np.array_equal(np.asarray(auto_leaf), np.asarray(ref_leaf))
+        # flash_attention: [1, s, 4, d'] GQA 4:2
+        q = jnp.asarray(rng.standard_normal((1, s, 4, 8)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((1, s, 2, 8)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((1, s, 2, 8)).astype(np.float32))
+        fa = jax.jit(functools.partial(flash_attention, causal=True),
+                     static_argnames=("impl",))
+        assert np.array_equal(np.asarray(fa(q, k, v, impl="auto")),
+                              np.asarray(fa(q, k, v, impl="ref")))
+        # diffusion_conv: [b, n, c] with 2 supports, K=2
+        sup = _random_supports(rng, n)
+        x = jnp.asarray(rng.standard_normal((b, n, c)).astype(np.float32))
+        w = jnp.asarray(
+            rng.standard_normal((5 * c, 6)).astype(np.float32) * 0.1)
+        bias = jnp.asarray(rng.standard_normal((6,)).astype(np.float32))
+        dc = jax.jit(functools.partial(diffusion_conv, k_hops=2),
+                     static_argnames=("impl",))
+        assert np.array_equal(
+            np.asarray(dc(x, sup, w, bias, impl="auto")),
+            np.asarray(dc(x, sup, w, bias, impl="ref")))
+
+
+def test_float_ops_auto_within_tolerance_when_tuned():
+    """Tune mode may crown a non-reference lowering for the float kernels;
+    the admission tolerance (allclose) is then the value contract."""
+    rng = np.random.default_rng(11)
+    a = jnp.asarray(rng.uniform(0.7, 1.0, (2, 32, 16)).astype(np.float32))
+    bb = jnp.asarray(rng.standard_normal((2, 32, 16)).astype(np.float32))
+    q = jnp.asarray(rng.standard_normal((1, 32, 4, 8)).astype(np.float32))
+    sup = _random_supports(rng, 16)
+    x = jnp.asarray(rng.standard_normal((2, 16, 4)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((5 * 4, 6)).astype(np.float32) * 0.1)
+    bias = jnp.zeros((6,), jnp.float32)
+    with tempfile.TemporaryDirectory() as tmp:
+        with autotuning(mode="tune", cache_dir=tmp, warmup=0, iters=1):
+            ls_auto = linear_scan(a, bb, impl="auto")
+            fa_auto = flash_attention(q, q, q, causal=True, impl="auto")
+            dc_auto = diffusion_conv(x, sup, w, bias, k_hops=2, impl="auto")
+    ls_ref = linear_scan(a, bb, impl="ref")
+    fa_ref = flash_attention(q, q, q, causal=True, impl="ref")
+    dc_ref = diffusion_conv(x, sup, w, bias, k_hops=2, impl="ref")
+    for auto_leaf, ref_leaf in zip(ls_auto, ls_ref):
+        np.testing.assert_allclose(np.asarray(auto_leaf),
+                                   np.asarray(ref_leaf), atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(fa_auto), np.asarray(fa_ref),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(dc_auto), np.asarray(dc_ref),
+                               atol=2e-3, rtol=2e-3)

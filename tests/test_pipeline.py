@@ -143,6 +143,21 @@ def test_gather_variants_agree_on_pipeline_batches(placement):
         assert np.array_equal(np.asarray(ref_y), np.asarray(y)), name
 
 
+@pytest.mark.parametrize("placement", list(Placement))
+def test_fit_with_auto_gather_bit_identical_to_slice(placement, tmp_path):
+    """gather="auto" fused into the train step (dispatch fires at trace
+    time, tuning into a throwaway cache) must leave the training RESULT
+    bit-identical to gather="slice" — every candidate the tuner can crown
+    is exact data movement, so auto only ever changes speed, never values."""
+    from repro.kernels.autotune import autotuning
+
+    base, _ = _pipe(placement, gather="slice").fit(eval_fn=None)
+    with autotuning(mode="tune", cache_dir=str(tmp_path), warmup=0, iters=1):
+        tuned, _ = _pipe(placement, gather="auto").fit(eval_fn=None)
+    for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(tuned)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
 # ------------------------------------------------------ per-rank feed contract
 @pytest.mark.parametrize("placement", list(Placement))
 def test_per_rank_feeds_assemble_epoch_global(placement):
