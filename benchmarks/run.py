@@ -17,8 +17,9 @@ import time
 import traceback
 
 from benchmarks import (fig7_scaling, fig9_generalized, kernels_bench,
-                        table1_memory, table2_case_study, table3_index_vs_base,
-                        table4_gpu_index, table5_shuffling, table6_a3tgcn)
+                        serve_bench, table1_memory, table2_case_study,
+                        table3_index_vs_base, table4_gpu_index,
+                        table5_shuffling, table6_a3tgcn)
 
 SUITES = {
     "table1": table1_memory.main,
@@ -30,6 +31,7 @@ SUITES = {
     "fig9": fig9_generalized.main,
     "table6": table6_a3tgcn.main,
     "kernels": kernels_bench.main,
+    "serve": serve_bench.main,
 }
 
 

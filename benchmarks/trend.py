@@ -50,6 +50,14 @@ HEADLINE_FIELDS: dict[str, tuple[str, str]] = {
     "step_overlap_pct": ("higher", "points"),
     "prefetch_step_us": ("lower", "ratio"),
     "peak_rss_bytes": ("lower", "ratio"),
+    # bench-serve (BENCH_serve.json, ISSUE 8): the serving engine under
+    # replayed load.  Direction-aware: latency falling is GOOD (a lower
+    # p50/p99 passes), throughput falling is the regression.  Occupancy is
+    # recorded but not gated (it is a utilization diagnostic, and moves
+    # with runner speed in either direction).
+    "serve_p50_ms": ("lower", "ratio"),
+    "serve_p99_ms": ("lower", "ratio"),
+    "serve_tokens_s": ("higher", "ratio"),
     # bench-kernels (BENCH_kernels.json) headline: what the auto dispatcher
     # actually runs per op, jitted steady state.
     "gather_slice_us": ("lower", "ratio"),

@@ -1,6 +1,14 @@
-"""Serving launcher: batched continuous-batching demo on a reduced config.
+"""Serving launcher: replay an arrival trace through the ServeEngine.
+
+Drives the sharded serving engine (``repro.serve``) on a reduced config —
+a plane fleet over the host mesh, batched prefill, per-request deadlines —
+and prints what it served.  ``--trace batch`` submits everything up front
+(the PR-4 demo behaviour); ``--trace poisson`` replays independent arrivals
+at ``--rate`` req/s against the wall clock, so backpressure and deadline
+expiry actually fire.
 
   python -m repro.launch.serve --arch qwen1.5-4b --requests 8 --slots 4
+  python -m repro.launch.serve --trace poisson --rate 30 --deadline 2.0
 """
 from __future__ import annotations
 
@@ -12,17 +20,26 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models.lm import model as lm
-from repro.train.serve import ServeConfig, Server
+from repro.serve import Backpressure, ServeConfig, ServeEngine
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen1.5-4b")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode lanes per plane")
+    ap.add_argument("--planes", type=int, default=1,
+                    help="inference planes (each owns a slot pool)")
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--trace", choices=("batch", "poisson"), default="batch",
+                    help="batch: submit all up front; poisson: timed arrivals")
+    ap.add_argument("--rate", type=float, default=30.0,
+                    help="poisson arrival rate, requests/second")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline in seconds (default: none)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -31,23 +48,52 @@ def main() -> None:
         raise SystemExit(f"{args.arch} is not an LM arch")
     cfg = arch.smoke_config()
     params = lm.init(jax.random.PRNGKey(args.seed), cfg)
-    srv = Server(params, cfg,
-                 ServeConfig(slots=args.slots, max_len=args.max_len,
-                             max_new_tokens=args.max_new_tokens,
-                             temperature=args.temperature),
-                 seed=args.seed)
+    engine = ServeEngine(params, cfg,
+                         ServeConfig(slots=args.slots, max_len=args.max_len,
+                                     max_new_tokens=args.max_new_tokens,
+                                     temperature=args.temperature),
+                         planes=args.planes, seed=args.seed)
     rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(4, 17)))
+               for _ in range(args.requests)]
+
+    rejects = 0
     t0 = time.perf_counter()
-    for _ in range(args.requests):
-        plen = int(rng.integers(4, 17))
-        srv.submit(rng.integers(0, cfg.vocab, size=plen))
-    out = srv.run()
+    if args.trace == "batch":
+        for p in prompts:
+            engine.submit(p, deadline_s=args.deadline)
+        out = engine.run()
+    else:
+        arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+        i = 0
+        while i < len(arrivals) or engine.active_lanes() or len(engine.router.queue):
+            now = time.perf_counter() - t0
+            while i < len(arrivals) and arrivals[i] <= now:
+                try:
+                    engine.submit(prompts[i], deadline_s=args.deadline)
+                    i += 1
+                except Backpressure:
+                    rejects += 1  # shed; retried on the next tick
+                    break
+            if not engine.step() and i < len(arrivals):
+                time.sleep(0.001)
+        out = engine.router.results()
     wall = time.perf_counter() - t0
-    toks = sum(len(v) for v in out.values())
-    print(f"served {len(out)} requests, {toks} tokens in {wall:.2f}s "
-          f"({toks / wall:.1f} tok/s, slots={args.slots})")
+
+    done = engine.router.done
+    ok = [r for r in done.values() if r.status == "ok"]
+    timed_out = len(done) - len(ok)
+    toks = sum(len(r.out) for r in ok)
+    mesh = engine.planes[0].mesh
+    print(f"served {len(ok)}/{len(done)} requests "
+          f"({timed_out} timeout, {rejects} backpressure-shed), "
+          f"{toks} tokens in {wall:.2f}s ({toks / wall:.1f} tok/s, "
+          f"planes={args.planes} slots={args.slots} "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))})")
     for rid in sorted(out):
-        print(f"  req {rid}: {out[rid][:8]}{'...' if len(out[rid]) > 8 else ''}")
+        tag = "" if done[rid].status == "ok" else f" [{done[rid].status}]"
+        print(f"  req {rid}{tag}: {out[rid][:8]}"
+              f"{'...' if len(out[rid]) > 8 else ''}")
 
 
 if __name__ == "__main__":

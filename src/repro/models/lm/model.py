@@ -427,6 +427,25 @@ def init_cache(cfg: LMConfig, batch: int, max_len: int):
     return caches
 
 
+def scatter_cache(cache, sub, slots):
+    """Scatter a k-batch cache pytree into k (arbitrary, non-contiguous)
+    lanes of a pool cache.
+
+    ``cache``: the slot-pool cache from ``init_cache`` — every leaf is
+    stage-stacked ``[repeats, batch, ...]`` with batch at axis 1.  ``sub``:
+    the same pytree with batch ``k`` (a batched-prefill output).  ``slots``:
+    int32 ``[k]`` lane indices.  One fused scatter per leaf replaces the
+    per-request ``dynamic_update_slice`` chain the single-lane fill path
+    pays k times.
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+
+    def put(big, small):
+        return big.at[:, slots].set(small.astype(big.dtype))
+
+    return jax.tree.map(put, cache, sub)
+
+
 def prefill(params, cfg: LMConfig, tokens, cache, *, prefix_embeds=None,
             shardings=None):
     """Fill the cache from a prompt.  Returns (last-token logits, cache, lengths)."""

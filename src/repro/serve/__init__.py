@@ -1,0 +1,20 @@
+"""Serving engine: sharded continuous batching (the Engine's inference twin).
+
+- ``Server``/``ServeConfig`` — the single-host reference server, greedy path
+  pinned bit-identical to manual decode.
+- ``InferencePlane`` — one host's sharded slot pool + jitted prefill/decode
+  over a (data × model) mesh.
+- ``Router`` — bounded admission (``Backpressure``), deadlines, prompt-length
+  grouping for batched prefill.
+- ``ServeEngine`` — Router + plane fleet; greedy output pinned bit-identical
+  to ``Server``.
+"""
+from repro.serve.common import count_transfers, device_get
+from repro.serve.engine import ServeEngine
+from repro.serve.plane import InferencePlane
+from repro.serve.router import Backpressure, Router, ServeRequest
+from repro.serve.server import ServeConfig, Server, validate_request
+
+__all__ = ["Backpressure", "InferencePlane", "Router", "ServeConfig",
+           "ServeEngine", "ServeRequest", "Server", "count_transfers",
+           "device_get", "validate_request"]

@@ -1,0 +1,37 @@
+"""Shared serving utilities: the device→host transfer funnel.
+
+Every blocking device→host pull in the serving stack goes through
+``device_get`` — the decode loop's latency budget is dominated by these
+syncs (each one stalls the Python thread on the device stream), so they are
+funneled through ONE seam that (a) tests can count via ``count_transfers``
+to pin the one-pull-per-step contract, and (b) keeps the hot loop honest:
+adding a second pull per step shows up as a failing assertion, not a silent
+p99 regression.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import numpy as np
+
+_COUNTER: dict | None = None
+
+
+def device_get(x) -> np.ndarray:
+    """Blocking device→host pull (the only sanctioned one in repro.serve)."""
+    global _COUNTER
+    if _COUNTER is not None:
+        _COUNTER["pulls"] += 1
+    return np.asarray(x)
+
+
+@contextlib.contextmanager
+def count_transfers():
+    """Count ``device_get`` calls in the block: ``with count_transfers() as c:
+    ...; c["pulls"]``.  Nestable; each block counts its own pulls."""
+    global _COUNTER
+    prev, _COUNTER = _COUNTER, {"pulls": 0}
+    try:
+        yield _COUNTER
+    finally:
+        _COUNTER = prev

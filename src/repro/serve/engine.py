@@ -1,0 +1,134 @@
+"""ServeEngine: Router + InferencePlane fleet — the serving Engine.
+
+Mirrors the training DataPlane/Engine split: the ``Router`` owns admission
+(backpressure, deadlines, prompt-length grouping), each ``InferencePlane``
+owns one host's sharded slot pool and jitted programs, and the engine is the
+step loop that moves requests between them:
+
+    step():  expire deadlines → batched-prefill queued requests into free
+             lanes (least-loaded plane first) → one batched decode step per
+             plane with live lanes → retire budget/EOS/full/deadline lanes.
+
+Greedy output is bit-identical to the single-host ``repro.serve.Server``
+(itself pinned to hand-rolled decode): decoding is per-lane, so neither the
+prefill grouping, the plane assignment, nor the pool's sharding may change
+what any request generates — the fleet-equivalence test enforces this.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.models.lm.config import LMConfig
+from repro.serve.plane import InferencePlane
+from repro.serve.router import Router, ServeRequest
+from repro.serve.server import ServeConfig
+
+
+class ServeEngine:
+    """Continuous-batching engine over one or more sharded slot pools."""
+
+    def __init__(self, params, cfg: LMConfig, serve: ServeConfig, *,
+                 planes: int = 1, mesh: Mesh | None = None,
+                 queue_limit: int | None = None,
+                 prefill_token_budget: int | None = None,
+                 seed: int = 0, clock: Callable[[], float] = time.monotonic):
+        self.serve = serve
+        #: default backpressure bound: 4 waves of the whole fleet
+        if queue_limit is None:
+            queue_limit = 4 * planes * serve.slots
+        self.router = Router(serve, queue_limit=queue_limit, clock=clock)
+        self.prefill_token_budget = (prefill_token_budget
+                                     or max(serve.max_len, 512))
+        # device_put inside each plane dedupes: already-committed shards are
+        # reused, so N planes share ONE device copy of the weights
+        self.planes = [InferencePlane(params, cfg, serve, mesh=mesh,
+                                      seed=seed + i)
+                       for i in range(planes)]
+        self.active: list[list[ServeRequest | None]] = [
+            [None] * serve.slots for _ in self.planes]
+
+    # ------------------------------------------------------------------ queue
+    def submit(self, prompt_tokens, *, max_new_tokens: int | None = None,
+               deadline_s: float | None = None) -> int:
+        """Admit a request (raises ``Backpressure`` / ``ValueError``)."""
+        return self.router.submit(prompt_tokens, max_new_tokens=max_new_tokens,
+                                  deadline_s=deadline_s)
+
+    # ------------------------------------------------------------ bookkeeping
+    def _retire(self, pi: int, slot: int, req: ServeRequest, *,
+                status: str = "ok") -> None:
+        self.router.finish(req, status=status)
+        self.active[pi][slot] = None
+        self.planes[pi].release(slot)
+
+    def _should_retire(self, req: ServeRequest, tok: int) -> bool:
+        hit_eos = (self.serve.eos_id is not None and tok == self.serve.eos_id)
+        return len(req.out) >= req.budget or hit_eos
+
+    def active_lanes(self) -> int:
+        return sum(1 for pool in self.active for r in pool if r is not None)
+
+    # ------------------------------------------------------------------- step
+    def step(self) -> int:
+        """One engine tick.  Returns live lanes + queued requests."""
+        self.router.expire()
+        # deadline sweep over live lanes: a request past its deadline must
+        # release the lane NOW — holding it starves queued requests
+        for pi, pool in enumerate(self.active):
+            for slot, req in enumerate(pool):
+                if req is not None and self.router.past_deadline(req):
+                    self._retire(pi, slot, req, status="timeout")
+
+        # admission: batched prefill into free lanes, least-loaded plane first
+        while self.router.queue:
+            frees = [(len(p.free_slots()), pi) for pi, p in enumerate(self.planes)]
+            n_free, pi = max(frees)
+            if n_free == 0:
+                break
+            plane = self.planes[pi]
+            group = self.router.pop_group(n_free, self.prefill_token_budget)
+            if not group:
+                break
+            slots = plane.free_slots()[:len(group)]
+            prompts = np.stack([r.prompt for r in group])
+            toks = plane.prefill_into(slots, prompts)
+            for req, slot, tok in zip(group, slots, toks):
+                req.out.append(int(tok))
+                if self._should_retire(req, int(tok)):
+                    # retired AT the prefill token (budget 1 / EOS first):
+                    # the lane frees immediately for this same step
+                    self._retire(pi, slot, req)
+                else:
+                    self.active[pi][slot] = req
+
+        # one batched decode step per plane with live lanes
+        for pi, (plane, pool) in enumerate(zip(self.planes, self.active)):
+            lanes = [s for s, r in enumerate(pool) if r is not None]
+            if not lanes:
+                continue
+            tok_row = plane.decode()
+            for slot in lanes:
+                req = pool[slot]
+                tok = int(tok_row[slot])
+                plane.advance(slot, tok)
+                req.out.append(tok)
+                full = plane.lengths[slot] >= self.serve.max_len - 1
+                if self._should_retire(req, tok) or full:
+                    self._retire(pi, slot, req)
+        return self.active_lanes() + len(self.router.queue)
+
+    def run(self) -> dict[int, list[int]]:
+        """Drain queue + lanes to completion.  rid → generated tokens."""
+        while self.step():
+            pass
+        return self.router.results()
+
+    # ------------------------------------------------------------------ stats
+    def occupancy(self) -> float:
+        """Live-lane fraction of the fleet's slot pool, 0..1."""
+        total = len(self.planes) * self.serve.slots
+        return self.active_lanes() / total if total else 0.0

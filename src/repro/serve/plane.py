@@ -1,0 +1,141 @@
+"""InferencePlane: one sharded slot pool — the device half of the engine.
+
+The serving analogue of the training DataPlane/Engine split: a plane owns
+every device-resident object (weights, the slot-pool KV cache, the jitted
+prefill/decode programs) for ONE host's pool, laid out over a (data × model)
+mesh with the exact shardings ``launch/dryrun.py`` proves compile for the
+production decode/prefill cells (``shd.lm_param_shardings`` with no FSDP,
+``shd.cache_shardings``, ``act_hints`` activation pins).  The engine above it
+only moves token ids and bookkeeping.
+
+Two jitted programs:
+
+- ``_decode``: the batched decode step over all ``slots`` lanes, explicit
+  ``in_shardings``/``out_shardings``, cache donated (the pool cache never
+  round-trips through host).
+- ``_prefill``: BATCHED prefill — ``[k, plen]`` prompts through one forward
+  that builds its own k-batch cache *inside* the jit (no host-side
+  ``init_cache`` alloc + upload per request), then one fused
+  ``scatter_cache`` lands all k lanes in the pool.  This replaces the
+  single-host server's per-request init_cache + per-request scatter chain,
+  the fill path's main waste.
+
+Decode bookkeeping (lengths, next tokens) is host-resident numpy; the only
+blocking sync per decode step is the single ``device_get`` of the sampled
+token row (see ``repro.serve.common``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.lm import model as lm
+from repro.models.lm.config import LMConfig
+from repro.serve import common
+from repro.serve.server import ServeConfig
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+class InferencePlane:
+    """Sharded slot pool + jitted prefill/decode for one host."""
+
+    def __init__(self, params, cfg: LMConfig, serve: ServeConfig, *,
+                 mesh: Mesh | None = None, seed: int = 0):
+        from repro.launch import sharding as shd
+        from repro.launch.mesh import dp_axes, dp_size, make_host_mesh
+        from repro.launch.specs import act_hints
+
+        self.cfg = cfg
+        self.serve = serve
+        self.mesh = mesh = mesh or make_host_mesh()
+        self._key = jax.random.PRNGKey(seed)
+
+        b, s = serve.slots, serve.max_len
+        params_shape = jax.eval_shape(lambda: params)
+        param_sh = shd.lm_param_shardings(params_shape, cfg, mesh, fsdp=())
+        self.params = jax.device_put(params, param_sh)
+        cache_shape = jax.eval_shape(lambda: lm.init_cache(cfg, b, s))
+        cache_sh = shd.cache_shardings(cache_shape, cfg, mesh)
+        self.cache = jax.device_put(lm.init_cache(cfg, b, s), cache_sh)
+
+        # lane row shardings: batch over the data axes when the pool divides
+        dp = dp_axes(mesh)
+        lane_spec = P(dp if len(dp) > 1 else dp[0]) if _div(b, dp_size(mesh)) else P()
+        lane_sh = NamedSharding(mesh, lane_spec)
+        rep = NamedSharding(mesh, P())
+        hints = act_hints(cfg, mesh)
+
+        # host-resident decode bookkeeping — uploaded as args, never pulled
+        self.lengths = np.zeros((b,), np.int32)
+        self.tokens = np.zeros((b, 1), np.int32)
+
+        self._decode = jax.jit(
+            lambda p, tok, cache, lengths: lm.decode_step(
+                p, cfg, tok, cache, lengths, shardings=hints),
+            in_shardings=(param_sh, lane_sh, cache_sh, lane_sh),
+            out_shardings=(lane_sh, cache_sh),
+            donate_argnums=(2,))
+
+        def prefill_fn(p, tokens):
+            # k-batch cache born INSIDE the jit: zero host alloc/upload
+            sub = lm.init_cache(cfg, tokens.shape[0], s)
+            logits, sub, _ = lm.prefill(p, cfg, tokens, sub, shardings=hints)
+            return logits, sub
+
+        # retraces per (k, plen) bucket; prompts are tiny — ship replicated
+        self._prefill = jax.jit(prefill_fn, in_shardings=(param_sh, rep))
+        self._scatter = jax.jit(lm.scatter_cache,
+                                in_shardings=(cache_sh, None, None),
+                                out_shardings=cache_sh, donate_argnums=(0,))
+
+    # ---------------------------------------------------------------- sampling
+    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
+        if self.serve.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, k = jax.random.split(self._key)
+        return jax.random.categorical(
+            k, logits / self.serve.temperature).astype(jnp.int32)
+
+    # ------------------------------------------------------------------ lanes
+    def free_slots(self) -> list[int]:
+        """Lanes with no resident sequence (length 0 = masked/never filled)."""
+        return [i for i in range(self.serve.slots) if self.lengths[i] == 0]
+
+    def prefill_into(self, slots: list[int], prompts: np.ndarray) -> np.ndarray:
+        """Batched prefill of ``[k, plen]`` prompts into ``slots`` (len k).
+
+        Returns the k sampled first tokens (host).  One device→host pull for
+        the whole group.
+        """
+        assert prompts.ndim == 2 and prompts.shape[0] == len(slots)
+        logits, sub = self._prefill(self.params, jnp.asarray(prompts, jnp.int32))
+        toks = common.device_get(self._sample(logits))
+        self.cache = self._scatter(self.cache, sub,
+                                   np.asarray(slots, np.int32))
+        for i, slot in enumerate(slots):
+            self.lengths[slot] = prompts.shape[1]
+            self.tokens[slot, 0] = toks[i]
+        return toks
+
+    def decode(self) -> np.ndarray:
+        """One batched decode step over the pool.  Returns the sampled token
+        row (host, [slots]) — the step's single device→host pull."""
+        logits, self.cache = self._decode(self.params, self.tokens,
+                                          self.cache, self.lengths)
+        return common.device_get(self._sample(logits))
+
+    def advance(self, slot: int, tok: int) -> None:
+        """Commit a decode step's token on a live lane."""
+        self.lengths[slot] += 1
+        self.tokens[slot, 0] = tok
+
+    def release(self, slot: int) -> None:
+        """Retire a lane: mask its token/length so later decode steps never
+        touch its stale state (the cache slice is replaced at next prefill)."""
+        self.lengths[slot] = 0
+        self.tokens[slot, 0] = 0

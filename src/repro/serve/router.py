@@ -1,0 +1,136 @@
+"""Request router: bounded admission queue, deadlines, prompt-length groups.
+
+The router owns everything about a request EXCEPT device state: admission
+(validation + backpressure when the queue outruns the fleet's slots),
+per-request deadlines (expired requests fail fast instead of holding a decode
+lane), and the prefill grouping policy — ``pop_group`` hands the engine a
+same-length batch of prompts up to a token budget, which is what makes
+batched prefill a single ``[k, plen]`` forward instead of k single-lane
+passes.
+
+Grouping never changes outputs: greedy decode is per-lane, so admission
+order only affects WHEN a request runs, not what it generates — the fleet
+bit-identity test pins this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+import numpy as np
+
+from repro.serve.server import ServeConfig, validate_request
+
+
+class Backpressure(RuntimeError):
+    """Raised by ``submit`` when the admission queue is full — the caller
+    (load balancer, client) must retry or shed load; queueing unboundedly
+    would only convert overload into timeout storms."""
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray
+    budget: int
+    deadline: float | None  # absolute, on the router's clock; None = never
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+    out: list[int] = dataclasses.field(default_factory=list)
+    status: str = "queued"  # queued | active | ok | timeout
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_at - self.submitted_at
+
+
+class Router:
+    """Admission + scheduling front of the serving engine."""
+
+    def __init__(self, serve: ServeConfig, *, queue_limit: int | None = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.serve = serve
+        #: max queued (not-yet-prefilled) requests; None = unbounded
+        self.queue_limit = queue_limit
+        self.clock = clock
+        self.queue: deque[ServeRequest] = deque()
+        self.done: dict[int, ServeRequest] = {}
+        self._next_rid = 0
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    # -------------------------------------------------------------- admission
+    def submit(self, prompt_tokens, *, max_new_tokens: int | None = None,
+               deadline_s: float | None = None) -> int:
+        """Admit a request.  Raises ``Backpressure`` when the queue is full,
+        ``ValueError`` on an invalid budget/prompt (see ``validate_request``)."""
+        prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
+        budget = validate_request(self.serve, prompt, max_new_tokens)
+        if self.queue_limit is not None and len(self.queue) >= self.queue_limit:
+            raise Backpressure(
+                f"queue full ({len(self.queue)}/{self.queue_limit} requests); "
+                f"retry or shed load")
+        now = self.clock()
+        req = ServeRequest(self._next_rid, prompt, budget,
+                           deadline=None if deadline_s is None else now + deadline_s,
+                           submitted_at=now)
+        self._next_rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    # -------------------------------------------------------------- deadlines
+    def expire(self) -> list[ServeRequest]:
+        """Fail queued requests whose deadline passed (they never reach a
+        slot).  Active lanes are expired by the engine, which owns them."""
+        now = self.clock()
+        expired = [r for r in self.queue
+                   if r.deadline is not None and now >= r.deadline]
+        for r in expired:
+            self.queue.remove(r)
+            self.finish(r, status="timeout")
+        return expired
+
+    def past_deadline(self, req: ServeRequest) -> bool:
+        return req.deadline is not None and self.clock() >= req.deadline
+
+    # ------------------------------------------------------------- scheduling
+    def pop_group(self, max_requests: int, token_budget: int) -> list[ServeRequest]:
+        """Pop a batch of SAME-prompt-length requests for one batched prefill.
+
+        Takes the oldest queued request's prompt length as the group key and
+        collects up to ``max_requests`` queued requests of that length whose
+        summed prompt tokens stay within ``token_budget`` (the group's
+        leader always ships, even alone — a budget smaller than one prompt
+        must not deadlock).  Other lengths stay queued for the next group.
+        """
+        if not self.queue or max_requests <= 0:
+            return []
+        plen = self.queue[0].prompt.size
+        group: list[ServeRequest] = []
+        tokens = 0
+        for r in list(self.queue):
+            if r.prompt.size != plen:
+                continue
+            if group and tokens + plen > token_budget:
+                break
+            group.append(r)
+            tokens += plen
+            if len(group) >= max_requests:
+                break
+        for r in group:
+            self.queue.remove(r)
+            r.status = "active"
+        return group
+
+    # --------------------------------------------------------------- results
+    def finish(self, req: ServeRequest, *, status: str = "ok") -> None:
+        req.status = status
+        req.finished_at = self.clock()
+        self.done[req.rid] = req
+
+    def results(self) -> dict[int, list[int]]:
+        """rid → generated tokens, for every finished request."""
+        return {rid: r.out for rid, r in self.done.items()}

@@ -1,0 +1,182 @@
+"""Single-host continuous-batching server over a fixed slot pool.
+
+The serving analogue of the paper's workflow: weights and caches are resident
+on device; the host only ships token ids.  ``Server`` keeps ``slots`` decode
+lanes; finished lanes are refilled from the request queue via single-request
+prefill into the shared cache (per-slot dynamic_update on the batch dim).
+
+This is the REFERENCE implementation — one lane prefilled at a time, greedy
+path pinned bit-identical to manual decode by tests.  The production engine
+(``repro.serve.engine.ServeEngine``) batches prefill and shards the pool over
+a (data × model) mesh; its greedy output is pinned bit-identical to this
+server, which keeps the whole stack anchored to hand-rolled decode.
+
+Decode bookkeeping (lengths, last tokens, lane occupancy) lives on the HOST:
+the only blocking device→host sync per decode step is the single
+``device_get`` of the sampled token row — per-lane ``int(arr[slot])`` reads
+would serialize O(slots) stream stalls into the latency path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import model as lm
+from repro.models.lm.config import LMConfig
+from repro.serve import common
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    slots: int = 4  # concurrent decode lanes
+    max_len: int = 256  # cache capacity per lane
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 = greedy
+    eos_id: int | None = None
+
+
+def validate_request(serve: ServeConfig, prompt: np.ndarray,
+                     max_new_tokens: int | None) -> int:
+    """Resolve + validate a request's token budget.  Returns the budget.
+
+    ``max_new_tokens`` compares against ``None`` (an explicit 0 is NOT "use
+    the default" — it is rejected, there is nothing to generate).  Over-long
+    prompts are rejected here: ``len(prompt) + budget`` must fit the lane's
+    ``max_len`` cache or the decode writes would wrap into the slice a
+    neighbouring position owns.
+    """
+    budget = serve.max_new_tokens if max_new_tokens is None else int(max_new_tokens)
+    if budget < 1:
+        raise ValueError(f"max_new_tokens must be >= 1, got {budget}")
+    if prompt.ndim != 1 or prompt.size == 0:
+        raise ValueError(f"prompt must be a non-empty 1-D token array, "
+                         f"got shape {prompt.shape}")
+    if prompt.size + budget > serve.max_len:
+        raise ValueError(
+            f"prompt ({prompt.size} tokens) + max_new_tokens ({budget}) "
+            f"exceeds max_len ({serve.max_len}); shorten the prompt or "
+            f"raise ServeConfig.max_len")
+    return budget
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    prompt: np.ndarray
+    out: list[int] = dataclasses.field(default_factory=list)
+    budget: int = 0
+
+
+class Server:
+    """Continuous-batching server around prefill/decode_step."""
+
+    def __init__(self, params, cfg: LMConfig, serve: ServeConfig, *, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.serve = serve
+        self.queue: deque[_Request] = deque()
+        self.done: dict[int, list[int]] = {}
+        self._next_rid = 0
+        self._key = jax.random.PRNGKey(seed)
+
+        b, s = serve.slots, serve.max_len
+        self.cache = lm.init_cache(cfg, b, s)
+        # host-resident bookkeeping: uploaded as decode args (cheap, async),
+        # never pulled back per-lane
+        self.lengths = np.zeros((b,), np.int32)
+        self.tokens = np.zeros((b, 1), np.int32)
+        self.active: list[_Request | None] = [None] * b
+
+        self._decode = jax.jit(
+            lambda p, tok, cache, lengths: lm.decode_step(p, cfg, tok, cache, lengths))
+        self._prefill1 = jax.jit(
+            lambda p, tok, cache: lm.prefill(p, cfg, tok, cache))
+
+    # ------------------------------------------------------------------ queue
+    def submit(self, prompt_tokens: np.ndarray, *, max_new_tokens: int | None = None) -> int:
+        prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
+        budget = validate_request(self.serve, prompt, max_new_tokens)
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(_Request(rid, prompt, budget=budget))
+        return rid
+
+    def _fill_slot(self, slot: int) -> bool:
+        """Prefill queued requests into ``slot`` until one survives.
+
+        A request can retire AT the prefill token: budget already met
+        (max_new_tokens=1) or the first sampled token is EOS — it must never
+        occupy a decode lane, or it decodes one token past its contract.
+        """
+        while self.queue:
+            req = self.queue.popleft()
+            # single-lane prefill into a fresh 1-batch cache, then scatter
+            cache1 = lm.init_cache(self.cfg, 1, self.serve.max_len)
+            logits, cache1, _ = self._prefill1(
+                self.params, jnp.asarray(req.prompt[None]), cache1)
+            tok = int(common.device_get(self._sample(logits))[0])
+            req.out.append(tok)
+            hit_eos = self.serve.eos_id is not None and tok == self.serve.eos_id
+            if len(req.out) >= req.budget or hit_eos:
+                self.done[req.rid] = req.out  # retired at prefill; slot stays free
+                continue
+
+            def put(big, small):
+                # stage-stacked caches: [repeats, ...] with batch at axis 1
+                return jax.lax.dynamic_update_slice_in_dim(
+                    big, small.astype(big.dtype), slot, axis=1)
+
+            self.cache = jax.tree.map(put, self.cache, cache1)
+            self.lengths[slot] = req.prompt.size  # prefill length, known on host
+            self.tokens[slot, 0] = tok
+            self.active[slot] = req
+            return True
+        return False
+
+    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
+        if self.serve.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, k = jax.random.split(self._key)
+        return jax.random.categorical(k, logits / self.serve.temperature).astype(jnp.int32)
+
+    # ------------------------------------------------------------------- step
+    def step(self) -> int:
+        """Refill free slots, run one batched decode step.  Returns #active."""
+        for slot in range(self.serve.slots):
+            if self.active[slot] is None:
+                if not self._fill_slot(slot):
+                    break
+        if not any(r is not None for r in self.active):
+            return 0
+        logits, self.cache = self._decode(self.params, self.tokens, self.cache,
+                                          self.lengths)
+        # the step's ONE device→host sync: the whole sampled token row
+        next_tok = common.device_get(self._sample(logits))
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.lengths[slot] += 1
+            tok = int(next_tok[slot])
+            self.tokens[slot, 0] = tok  # next step's input for this lane
+            req.out.append(tok)
+            hit_eos = self.serve.eos_id is not None and tok == self.serve.eos_id
+            full = self.lengths[slot] >= self.serve.max_len - 1
+            if len(req.out) >= req.budget or hit_eos or full:
+                self.done[req.rid] = req.out
+                self.active[slot] = None
+                # mask the retired lane so later steps never decode its
+                # stale token (its length resets; the cache slice is
+                # overwritten whole at the next prefill)
+                self.lengths[slot] = 0
+                self.tokens[slot, 0] = 0
+        return sum(1 for r in self.active if r is not None)
+
+    def run(self) -> dict[int, list[int]]:
+        """Drain the queue to completion."""
+        while self.queue or any(r is not None for r in self.active):
+            self.step()
+        return self.done

@@ -1,134 +1,10 @@
-"""Batched serving loop: continuous batching over a fixed slot pool.
+"""Compat shim: the server moved to ``repro.serve`` (PR 8).
 
-The serving analogue of the paper's workflow: weights and caches are resident
-on device; the host only ships token ids.  ``Server`` keeps ``slots`` decode
-lanes; finished lanes are refilled from the request queue via single-request
-prefill into the shared cache (per-slot dynamic_update on the batch dim).
-
-For production meshes ``launch/dryrun.py`` lowers the same ``decode_step`` /
-``prefill`` programs with the cache sharded over (data × model) — this module
-is the single-host driver used by the examples and tests.
+``repro.serve`` is the serving engine package — ``Server``/``ServeConfig``
+(single-host reference), ``InferencePlane``/``Router``/``ServeEngine`` (the
+sharded fleet).  Import from there; this module keeps the historical
+``repro.train.serve`` import path working.
 """
-from __future__ import annotations
+from repro.serve.server import ServeConfig, Server
 
-import dataclasses
-from collections import deque
-from typing import Any
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.models.lm import model as lm
-from repro.models.lm.config import LMConfig
-
-
-@dataclasses.dataclass(frozen=True)
-class ServeConfig:
-    slots: int = 4  # concurrent decode lanes
-    max_len: int = 256  # cache capacity per lane
-    max_new_tokens: int = 32
-    temperature: float = 0.0  # 0 = greedy
-    eos_id: int | None = None
-
-
-@dataclasses.dataclass
-class _Request:
-    rid: int
-    prompt: np.ndarray
-    out: list[int] = dataclasses.field(default_factory=list)
-    budget: int = 0
-
-
-class Server:
-    """Continuous-batching server around prefill/decode_step."""
-
-    def __init__(self, params, cfg: LMConfig, serve: ServeConfig, *, seed: int = 0):
-        self.params = params
-        self.cfg = cfg
-        self.serve = serve
-        self.queue: deque[_Request] = deque()
-        self.done: dict[int, list[int]] = {}
-        self._next_rid = 0
-        self._key = jax.random.PRNGKey(seed)
-
-        b, s = serve.slots, serve.max_len
-        self.cache = lm.init_cache(cfg, b, s)
-        self.lengths = jnp.zeros((b,), jnp.int32)
-        self.tokens = jnp.zeros((b, 1), jnp.int32)
-        self.active: list[_Request | None] = [None] * b
-
-        self._decode = jax.jit(
-            lambda p, tok, cache, lengths: lm.decode_step(p, cfg, tok, cache, lengths))
-        self._prefill1 = jax.jit(
-            lambda p, tok, cache: lm.prefill(p, cfg, tok, cache))
-
-    # ------------------------------------------------------------------ queue
-    def submit(self, prompt_tokens: np.ndarray, *, max_new_tokens: int | None = None) -> int:
-        rid = self._next_rid
-        self._next_rid += 1
-        self.queue.append(_Request(rid, np.asarray(prompt_tokens, np.int32),
-                                   budget=max_new_tokens or self.serve.max_new_tokens))
-        return rid
-
-    def _fill_slot(self, slot: int) -> bool:
-        if not self.queue:
-            return False
-        req = self.queue.popleft()
-        # single-lane prefill into a fresh 1-batch cache, then scatter into slot
-        cache1 = lm.init_cache(self.cfg, 1, self.serve.max_len)
-        logits, cache1, lengths1 = self._prefill1(
-            self.params, jnp.asarray(req.prompt[None]), cache1)
-        tok = self._sample(logits)[0]
-        req.out.append(int(tok))
-
-        def put(big, small):
-            # stage-stacked caches: [repeats, ...] with batch at axis 1
-            return jax.lax.dynamic_update_slice_in_dim(big, small.astype(big.dtype),
-                                                       slot, axis=1)
-
-        self.cache = jax.tree.map(put, self.cache, cache1)
-        self.lengths = self.lengths.at[slot].set(int(lengths1[0]))
-        self.tokens = self.tokens.at[slot, 0].set(tok)
-        self.active[slot] = req
-        return True
-
-    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
-        if self.serve.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self._key, k = jax.random.split(self._key)
-        return jax.random.categorical(k, logits / self.serve.temperature).astype(jnp.int32)
-
-    # ------------------------------------------------------------------- step
-    def step(self) -> int:
-        """Refill free slots, run one batched decode step.  Returns #active."""
-        for slot in range(self.serve.slots):
-            if self.active[slot] is None:
-                if not self._fill_slot(slot):
-                    break
-        if not any(self.active):
-            return 0
-        logits, self.cache = self._decode(self.params, self.tokens, self.cache,
-                                          self.lengths)
-        next_tok = self._sample(logits)
-        self.lengths = self.lengths + jnp.asarray(
-            [1 if r is not None else 0 for r in self.active], jnp.int32)
-        self.tokens = next_tok[:, None]
-        for slot, req in enumerate(self.active):
-            if req is None:
-                continue
-            tok = int(next_tok[slot])
-            req.out.append(tok)
-            hit_eos = self.serve.eos_id is not None and tok == self.serve.eos_id
-            full = int(self.lengths[slot]) >= self.serve.max_len - 1
-            if len(req.out) >= req.budget or hit_eos or full:
-                self.done[req.rid] = req.out
-                self.active[slot] = None
-                self.lengths = self.lengths.at[slot].set(0)
-        return sum(1 for r in self.active if r is not None)
-
-    def run(self) -> dict[int, list[int]]:
-        """Drain the queue to completion."""
-        while self.queue or any(self.active):
-            self.step()
-        return self.done
+__all__ = ["ServeConfig", "Server"]

@@ -31,6 +31,15 @@ KBASE = {
     "diffusion_conv_auto_us": 155.0,
 }
 
+# The bench-serve (BENCH_serve.json) headline: Poisson latencies + bursty
+# throughput.  Occupancy rides the record but is NOT gated (utilization
+# diagnostic), so it stays out of the gate table on purpose.
+SBASE = {
+    "serve_p50_ms": 6.7,
+    "serve_p99_ms": 9.5,
+    "serve_tokens_s": 350.0,
+}
+
 
 def _verdicts(prev, cur, **kw):
     return {r["field"]: r["verdict"] for r in compare_headlines(prev, cur, **kw)}
@@ -115,12 +124,26 @@ def test_every_headline_field_is_covered():
     """One gate table spans BOTH artifact kinds; a field present in neither
     record (it belongs to the other kind) emits no row at all, so a
     bench-smoke pair is never polluted by bench-kernels 'missing' rows."""
-    assert set(HEADLINE_FIELDS) == set(BASE) | set(KBASE)
+    assert set(HEADLINE_FIELDS) == set(BASE) | set(KBASE) | set(SBASE)
     assert len(compare_headlines(BASE, BASE)) == len(BASE)
     assert len(compare_headlines(KBASE, KBASE)) == len(KBASE)
+    assert len(compare_headlines(SBASE, SBASE)) == len(SBASE)
     assert set(_verdicts(KBASE, KBASE).values()) == {"ok"}
     v = _verdicts(KBASE, dict(KBASE, gather_auto_us=12.0 * 1.3))
     assert v["gather_auto_us"] == "fail"
+
+
+def test_serve_fields_direction_aware():
+    """Latency DOWN is good — only the rise flags; throughput the reverse."""
+    v = _verdicts(SBASE, dict(SBASE, serve_p50_ms=6.7 * 0.7,
+                              serve_p99_ms=9.5 * 0.7))
+    assert v["serve_p50_ms"] == "ok" and v["serve_p99_ms"] == "ok"
+    v = _verdicts(SBASE, dict(SBASE, serve_p99_ms=9.5 * 1.3))
+    assert v["serve_p99_ms"] == "fail"
+    v = _verdicts(SBASE, dict(SBASE, serve_tokens_s=350.0 * 0.7))
+    assert v["serve_tokens_s"] == "fail"
+    v = _verdicts(SBASE, dict(SBASE, serve_tokens_s=350.0 * 1.3))
+    assert v["serve_tokens_s"] == "ok"
 
 
 # --------------------------------------------------------------- CLI contract

@@ -1,0 +1,295 @@
+"""Serving engine: retirement regressions, fleet equivalence, router policy.
+
+Pins the PR-8 contracts:
+- prefill-time retirement (budget-1 / EOS-at-prefill) on BOTH the reference
+  ``Server`` and the ``ServeEngine``,
+- submit validation (explicit ``max_new_tokens=0`` rejected, over-long
+  prompts rejected — never silently corrupting a lane's cache slice),
+- the one-device-pull-per-decode-step contract via the transfer-counting
+  shim (``repro.serve.common.count_transfers``),
+- greedy fleet output bit-identical to the single-host Server (which
+  ``test_train_serve.py`` pins to manual decode),
+- router backpressure + deadlines, batched-prefill grouping,
+- the sharded slot pool on a forced multi-device host mesh (the CI mesh-8
+  leg runs this file with ``--xla_force_host_platform_device_count=8``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import LM_ARCHS
+from repro.models.lm import model as lm
+from repro.serve import (Backpressure, Router, ServeConfig, ServeEngine,
+                         Server, count_transfers)
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = LM_ARCHS["qwen1.5-4b"].smoke_config()
+    params = lm.init(jax.random.PRNGKey(1), cfg)
+    return cfg, params
+
+
+def _prompts(n, rng, lo=2, hi=10):
+    return [rng.integers(0, 120, size=int(rng.integers(lo, hi))) for _ in range(n)]
+
+
+def _first_greedy_token(params, cfg, prompt, max_len=48) -> int:
+    cache = lm.init_cache(cfg, 1, max_len)
+    logits, _, _ = lm.prefill(params, cfg, jnp.asarray(np.asarray(prompt)[None]),
+                              cache)
+    return int(jnp.argmax(logits, -1)[0])
+
+
+# ------------------------------------------------- prefill-time retirement
+@pytest.mark.parametrize("impl", ["server", "engine"])
+def test_budget_one_returns_exactly_one_token(lm_setup, impl):
+    """Regression: max_new_tokens=1 used to return TWO tokens (the prefill
+    token never counted against the budget before the first decode)."""
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=2, max_len=48, max_new_tokens=4)
+    srv = (Server(params, cfg, sc) if impl == "server"
+           else ServeEngine(params, cfg, sc))
+    prompt = np.array([3, 1, 4, 1, 5], np.int32)
+    rid = srv.submit(prompt, max_new_tokens=1)
+    out = srv.run()
+    assert out[rid] == [_first_greedy_token(params, cfg, prompt)]
+
+
+@pytest.mark.parametrize("impl", ["server", "engine"])
+def test_eos_at_prefill_stops_immediately(lm_setup, impl):
+    """Regression: a prompt whose FIRST sampled token is eos_id used to keep
+    decoding past EOS (the prefill token was never EOS-checked)."""
+    cfg, params = lm_setup
+    prompt = np.array([3, 1, 4, 1, 5], np.int32)
+    eos = _first_greedy_token(params, cfg, prompt)
+    sc = ServeConfig(slots=2, max_len=48, max_new_tokens=6, eos_id=eos)
+    srv = (Server(params, cfg, sc) if impl == "server"
+           else ServeEngine(params, cfg, sc))
+    rid = srv.submit(prompt)
+    out = srv.run()
+    assert out[rid] == [eos]
+
+
+def test_prefill_retired_slot_refills_same_step(lm_setup):
+    """A request retired at prefill must not waste its slot: queued work
+    behind it is admitted into the SAME lane within the same step."""
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=1, max_len=48, max_new_tokens=3)
+    srv = Server(params, cfg, sc)
+    p1, p2 = np.array([3, 1, 4], np.int32), np.array([1, 5, 9, 2], np.int32)
+    r1 = srv.submit(p1, max_new_tokens=1)  # retires at prefill
+    r2 = srv.submit(p2)
+    srv.step()
+    assert r1 in srv.done  # never occupied the lane
+    assert srv.active[0] is not None and srv.active[0].rid == r2
+    out = srv.run()
+    assert len(out[r1]) == 1 and len(out[r2]) == 3
+
+
+# ----------------------------------------------------------- submit contract
+@pytest.mark.parametrize("impl", ["server", "engine"])
+def test_submit_validation(lm_setup, impl):
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=2, max_len=32, max_new_tokens=5)
+    srv = (Server(params, cfg, sc) if impl == "server"
+           else ServeEngine(params, cfg, sc))
+    prompt = np.array([3, 1, 4], np.int32)
+    # explicit 0 is NOT "use the default" — there is nothing to generate
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        srv.submit(prompt, max_new_tokens=0)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        srv.submit(prompt, max_new_tokens=-2)
+    # an over-long prompt must be rejected, not corrupt the lane's cache
+    with pytest.raises(ValueError, match="max_len"):
+        srv.submit(np.arange(31, dtype=np.int32), max_new_tokens=2)
+    with pytest.raises(ValueError, match="prompt"):
+        srv.submit(np.zeros((0,), np.int32))
+    # None still means the config default
+    rid = srv.submit(prompt)
+    assert len(srv.run()[rid]) == 5
+
+
+def test_full_cache_boundary_exact_fit(lm_setup):
+    """plen + budget == max_len is the tightest legal request: it must
+    complete with exactly ``budget`` tokens (no early 'cache full' retire,
+    no overrun)."""
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=1, max_len=16, max_new_tokens=4)
+    for impl in ("server", "engine"):
+        srv = (Server(params, cfg, sc) if impl == "server"
+               else ServeEngine(params, cfg, sc))
+        rid = srv.submit(np.arange(1, 13, dtype=np.int32), max_new_tokens=4)
+        assert len(srv.run()[rid]) == 4, impl
+
+
+# ----------------------------------------------------------- sync discipline
+def test_server_one_pull_per_decode_step(lm_setup):
+    """O(slots) blocking syncs per step was the decode hot path's bug: with
+    every lane live, a step must cost exactly ONE device→host pull."""
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=4, max_len=48, max_new_tokens=8)
+    srv = Server(params, cfg, sc)
+    rng = np.random.default_rng(0)
+    for p in _prompts(4, rng):
+        srv.submit(p)
+    with count_transfers() as c:
+        srv.step()  # 4 single-lane prefills + 1 decode
+    assert c["pulls"] == 5
+    with count_transfers() as c:
+        srv.step()  # steady state: all lanes live
+    assert c["pulls"] == 1
+
+
+def test_engine_batched_prefill_single_pull(lm_setup):
+    """The engine's batched prefill collapses k same-length fills into ONE
+    forward + ONE pull (vs the server's k)."""
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=4, max_len=48, max_new_tokens=8)
+    eng = ServeEngine(params, cfg, sc)
+    for _ in range(4):
+        eng.submit(np.array([3, 1, 4, 1, 5], np.int32))
+    with count_transfers() as c:
+        eng.step()  # 1 batched prefill + 1 decode
+    assert c["pulls"] == 2
+    with count_transfers() as c:
+        eng.step()
+    assert c["pulls"] == 1
+
+
+# -------------------------------------------------------- fleet equivalence
+def test_fleet_greedy_bit_identical_to_server(lm_setup):
+    """2-plane engine (batched prefill, sharded pool, different admission
+    order) must generate EXACTLY what the reference server generates for
+    every request — grouping/placement can change when, never what."""
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=2, max_len=48, max_new_tokens=5, eos_id=7)
+    rng = np.random.default_rng(3)
+    prompts = _prompts(9, rng)
+
+    srv = Server(params, cfg, sc)
+    for p in prompts:
+        srv.submit(p)
+    ref = srv.run()
+
+    eng = ServeEngine(params, cfg, sc, planes=2)
+    rids = [eng.submit(p) for p in prompts]
+    got = eng.run()
+    for i, rid in enumerate(rids):
+        assert got[rid] == ref[i], f"request {i} diverged"
+
+
+def test_engine_temperature_sampling_runs(lm_setup):
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=2, max_len=48, max_new_tokens=4, temperature=0.8)
+    eng = ServeEngine(params, cfg, sc, seed=7)
+    rng = np.random.default_rng(1)
+    rids = [eng.submit(p) for p in _prompts(3, rng)]
+    out = eng.run()
+    assert all(len(out[r]) == 4 for r in rids)
+    assert all(0 <= t < cfg.padded_vocab for r in rids for t in out[r])
+
+
+# ------------------------------------------------------------- router policy
+def test_router_backpressure_when_queue_outruns_slots(lm_setup):
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=2, max_len=32, max_new_tokens=3)
+    eng = ServeEngine(params, cfg, sc, queue_limit=3)
+    prompt = np.array([3, 1, 4], np.int32)
+    for _ in range(3):
+        eng.submit(prompt)
+    with pytest.raises(Backpressure, match="queue full"):
+        eng.submit(prompt)
+    # draining the queue re-opens admission
+    eng.run()
+    eng.submit(prompt)
+
+
+def test_router_group_same_length_within_token_budget():
+    sc = ServeConfig(slots=8, max_len=64, max_new_tokens=4)
+    r = Router(sc, queue_limit=None)
+    for plen in (5, 5, 3, 5, 3):
+        r.submit(np.arange(1, plen + 1, dtype=np.int32))
+    g = r.pop_group(8, token_budget=64)
+    assert [q.prompt.size for q in g] == [5, 5, 5]  # same-length, FIFO-biased
+    g2 = r.pop_group(8, token_budget=64)
+    assert [q.prompt.size for q in g2] == [3, 3]
+    assert not r.queue
+    # the token budget caps the group — but the leader always ships
+    for plen in (6, 6, 6):
+        r.submit(np.arange(1, plen + 1, dtype=np.int32))
+    g3 = r.pop_group(8, token_budget=12)
+    assert len(g3) == 2
+    g4 = r.pop_group(8, token_budget=1)  # smaller than one prompt: no deadlock
+    assert len(g4) == 1
+
+
+def test_router_deadline_expires_queued_and_active(lm_setup):
+    cfg, params = lm_setup
+    now = [0.0]
+    sc = ServeConfig(slots=1, max_len=32, max_new_tokens=8)
+    eng = ServeEngine(params, cfg, sc, clock=lambda: now[0])
+    fast = eng.submit(np.array([3, 1, 4], np.int32), deadline_s=5.0)
+    slow = eng.submit(np.array([1, 5, 9], np.int32), deadline_s=0.5)
+    eng.step()  # fast occupies the single lane; slow waits
+    now[0] = 1.0  # slow's deadline passes while queued
+    eng.step()
+    assert eng.router.done[slow].status == "timeout"
+    assert eng.router.done[slow].out == []
+    now[0] = 6.0  # fast's deadline passes while ACTIVE: partial output
+    eng.step()
+    req = eng.router.done[fast]
+    assert req.status == "timeout" and 0 < len(req.out) < 8
+    assert eng.active_lanes() == 0
+
+
+# --------------------------------------------------------------- cache utils
+def test_scatter_cache_matches_per_slot_updates(lm_setup):
+    cfg, params = lm_setup
+    pool = lm.init_cache(cfg, 4, 16)
+    rng = np.random.default_rng(0)
+    sub = jax.tree.map(
+        lambda a: jnp.asarray(rng.standard_normal((a.shape[0], 2) + a.shape[2:])
+                              .astype(np.float32)).astype(a.dtype), pool)
+    slots = [3, 1]
+    got = lm.scatter_cache(pool, sub, slots)
+
+    want = pool
+    for i, s in enumerate(slots):
+        want = jax.tree.map(
+            lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+                big, small[:, i:i + 1].astype(big.dtype), s, axis=1),
+            want, sub)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------- sharded pool
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs the forced 8-device host mesh (CI mesh-8)")
+def test_sharded_pool_on_8_device_mesh(lm_setup):
+    """The plane's slot pool really shards over the (data × model) mesh and
+    the sharded fleet still matches the reference server bit-exactly."""
+    from repro.launch.mesh import make_host_mesh
+
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=8, max_len=48, max_new_tokens=4)
+    rng = np.random.default_rng(5)
+    prompts = _prompts(10, rng)
+
+    srv = Server(params, cfg, sc)
+    for p in prompts:
+        srv.submit(p)
+    ref = srv.run()
+
+    mesh = make_host_mesh(model=2)  # (data=4, model=2)
+    eng = ServeEngine(params, cfg, sc, mesh=mesh)
+    rids = [eng.submit(p) for p in prompts]
+    got = eng.run()
+    for i, rid in enumerate(rids):
+        assert got[rid] == ref[i]
+    # proof of sharding: a kv-cache leaf spans more than one device
+    leaf = jax.tree.leaves(eng.planes[0].cache)[0]
+    assert len(leaf.sharding.device_set) > 1
+    assert len({s.device for s in leaf.addressable_shards}) > 1
