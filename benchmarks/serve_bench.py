@@ -130,11 +130,79 @@ def _suite(*, smoke: bool, arch: str, rate: float, seed: int) -> dict:
         row(f"serve/{kind}_occupancy_pct", s["occupancy_pct"], "%", detail)
         row(f"serve/{kind}_rejected", s["rejected_submits"], "count",
             f"queue_limit={4 * slots}")
+    stats["paged"] = _paged_arm(params, cfg, arch=arch, slots=slots,
+                                budget=budget, rate=rate, rng=rng,
+                                contiguous_bytes=engine.planes[0].cache_bytes())
     stats["config"] = {"arch": arch, "slots": slots, "max_len": 64,
                        "max_new_tokens": budget, "requests": n, "rate": rate,
                        "burst": burst, "queue_limit": 4 * slots,
                        "plens": list(PLENS)}
     return stats
+
+
+def _paged_arm(params, cfg, *, arch: str, slots: int, budget: int,
+               rate: float, rng, contiguous_bytes: int) -> dict:
+    """The PR 9 paged-KV memory headlines — deterministic arithmetic at
+    fixed config, measured on REAL planes (cache_bytes sums the actual
+    device buffers; saturation counts actual live lanes after admission):
+
+    - ``serve_cache_bytes``: resident KV bytes with a pool sized to the
+      workload's LIVE tokens (prompt+budget per request x slots) instead of
+      ``slots x max_len`` — the memory the paging refactor saves at the
+      same load (lower = better; gated against the contiguous baseline in
+      CI's bench leg).
+    - ``serve_admitted_at_saturation``: how many requests decode
+      CONCURRENTLY inside the contiguous layout's byte budget.  Contiguous
+      admits exactly ``slots``; paged repacks the same bytes into
+      ``pool_blocks // blocks_per_request`` lanes (higher = better).
+    """
+    bs = 8
+    live = max(PLENS) + budget  # lifetime tokens of the longest request
+    blocks_per_req = -(-live // bs)
+
+    # live-token pool: the memory-win configuration at the SAME load
+    sc_live = ServeConfig(slots=slots, max_len=64, max_new_tokens=budget,
+                          block_size=bs, pool_blocks=slots * blocks_per_req)
+    eng = ServeEngine(params, cfg, sc_live, queue_limit=4 * slots, seed=0)
+    _warmup(eng, slots)
+    paged_bytes = eng.planes[0].cache_bytes()
+    arrivals = _traces("poisson", 2 * slots, rate, slots, rng)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.choice(PLENS)))
+               for _ in range(2 * slots)]
+    replay = _replay(eng, arrivals, prompts, budget)
+    detail = f"{arch} bs={bs} pool={slots * blocks_per_req} blocks"
+    row("serve/paged_cache_bytes", paged_bytes, "bytes", detail)
+    row("serve/contiguous_cache_bytes", contiguous_bytes, "bytes",
+        f"{arch} slots={slots} max_len=64")
+    row("serve/paged_p50_ms", f"{replay['p50_ms']:.1f}", "ms", detail)
+
+    # saturation: same bytes as contiguous => slots*ceil(max_len/bs) usable
+    # blocks; admit far more requests than contiguous slots and count how
+    # many actually hold a decode lane after admission settles
+    sat_pool = slots * (64 // bs)
+    sat_lanes = sat_pool // blocks_per_req
+    sc_sat = ServeConfig(slots=sat_lanes, max_len=64, max_new_tokens=budget,
+                         block_size=bs, pool_blocks=sat_pool)
+    eng_sat = ServeEngine(params, cfg, sc_sat, queue_limit=4 * sat_lanes,
+                          seed=0)
+    for _ in range(2 * sat_lanes):
+        eng_sat.submit(rng.integers(0, cfg.vocab, size=max(PLENS)),
+                       max_new_tokens=budget)
+    eng_sat.step()
+    admitted = eng_sat.active_lanes()
+    eng_sat.run()
+    row("serve/admitted_at_saturation", admitted, "requests",
+        f"paged bs={bs} pool={sat_pool} blocks vs {slots} contiguous slots")
+    return {
+        "block_size": bs, "blocks_per_request": blocks_per_req,
+        "live_pool_blocks": slots * blocks_per_req,
+        "cache_bytes": int(paged_bytes),
+        "contiguous_cache_bytes": int(contiguous_bytes),
+        "bytes_ratio": round(paged_bytes / contiguous_bytes, 3),
+        "admitted_at_saturation": int(admitted),
+        "contiguous_slots": slots,
+        "replay": replay,
+    }
 
 
 def main(*, smoke: bool = False, out: str | None = None,
@@ -166,6 +234,13 @@ def main(*, smoke: bool = False, out: str | None = None,
             "serve_p99_ms": po["p99_ms"],
             "serve_tokens_s": bu["tokens_s"],
             "serve_occupancy_pct": bu["occupancy_pct"],
+            # paged KV (PR 9): resident cache bytes with a live-token pool
+            # (must stay measurably below the contiguous baseline — CI's
+            # bench leg asserts it) and concurrent requests inside the
+            # contiguous byte budget
+            "serve_cache_bytes": stats["paged"]["cache_bytes"],
+            "serve_admitted_at_saturation":
+                stats["paged"]["admitted_at_saturation"],
         },
         "traces": stats,
         "rows": records,

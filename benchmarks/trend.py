@@ -58,6 +58,13 @@ HEADLINE_FIELDS: dict[str, tuple[str, str]] = {
     "serve_p50_ms": ("lower", "ratio"),
     "serve_p99_ms": ("lower", "ratio"),
     "serve_tokens_s": ("higher", "ratio"),
+    # Paged KV (PR 9): resident cache bytes with a pool sized to live tokens
+    # (growing = the paging win eroding), and how many requests fit
+    # CONCURRENTLY inside the contiguous layout's byte budget (falling =
+    # block accounting or pool sizing regressed).  Both are deterministic
+    # arithmetic at fixed config, so any drift is a real change.
+    "serve_cache_bytes": ("lower", "ratio"),
+    "serve_admitted_at_saturation": ("higher", "ratio"),
     # bench-kernels (BENCH_kernels.json) headline: what the auto dispatcher
     # actually runs per op, jitted steady state.
     "gather_slice_us": ("lower", "ratio"),

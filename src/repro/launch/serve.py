@@ -1,4 +1,4 @@
-"""Serving launcher: replay an arrival trace through the ServeEngine.
+"""Serving launcher: replay an arrival trace through the serving stack.
 
 Drives the sharded serving engine (``repro.serve``) on a reduced config —
 a plane fleet over the host mesh, batched prefill, per-request deadlines —
@@ -7,12 +7,34 @@ and prints what it served.  ``--trace batch`` submits everything up front
 at ``--rate`` req/s against the wall clock, so backpressure and deadline
 expiry actually fire.
 
+``--block-size`` switches the KV cache to PAGED mode: cache lines come from
+a shared pool of fixed-size blocks (``--pool-blocks`` usable blocks; default
+= contiguous capacity at block granularity, so size it DOWN to expected live
+tokens to realise the memory win) and admission accounts blocks, raising
+clean backpressure instead of OOM-ing when the pool is exhausted.
+
+``--role`` picks the process's job in an ELASTIC FLEET (PR 9):
+
+- ``engine`` (default) — everything in one process, as before;
+- ``fleet``  — coordinator: spawns ``--planes`` per-host worker processes
+  (re-invoking this module with ``--role worker``), assigns requests over
+  file mailboxes, tracks liveness via heartbeats, and re-prefills a dead
+  worker's in-flight requests on survivors;
+- ``worker`` — one serving host: a single-plane engine pumping the file
+  mailboxes under ``--fleet-dir`` and beating ``hb_<id>.json``.
+
   python -m repro.launch.serve --arch qwen1.5-4b --requests 8 --slots 4
   python -m repro.launch.serve --trace poisson --rate 30 --deadline 2.0
+  python -m repro.launch.serve --block-size 16 --pool-blocks 24
+  python -m repro.launch.serve --role fleet --planes 2 --requests 8
 """
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
+import sys
+import tempfile
 import time
 
 import jax
@@ -20,42 +42,47 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models.lm import model as lm
-from repro.serve import Backpressure, ServeConfig, ServeEngine
+from repro.serve import (Backpressure, FileMailbox, FleetEngine, ServeConfig,
+                         ServeEngine, ServeWorker)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", default="qwen1.5-4b")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4,
-                    help="decode lanes per plane")
-    ap.add_argument("--planes", type=int, default=1,
-                    help="inference planes (each owns a slot pool)")
-    ap.add_argument("--max-new-tokens", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--trace", choices=("batch", "poisson"), default="batch",
-                    help="batch: submit all up front; poisson: timed arrivals")
-    ap.add_argument("--rate", type=float, default=30.0,
-                    help="poisson arrival rate, requests/second")
-    ap.add_argument("--deadline", type=float, default=None,
-                    help="per-request deadline in seconds (default: none)")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def _serve_config(args: argparse.Namespace) -> ServeConfig:
+    return ServeConfig(slots=args.slots, max_len=args.max_len,
+                       max_new_tokens=args.max_new_tokens,
+                       temperature=args.temperature,
+                       block_size=args.block_size or None,
+                       pool_blocks=args.pool_blocks or None)
 
+
+def _prompts(args: argparse.Namespace, vocab: int) -> list:
+    rng = np.random.default_rng(args.seed)
+    return [rng.integers(0, vocab, size=int(rng.integers(4, 17)))
+            for _ in range(args.requests)]
+
+
+def _report(done: dict, out: dict, wall: float, rejects: int, extra: str) -> None:
+    ok = [r for r in done.values() if r.status == "ok"]
+    timed_out = len(done) - len(ok)
+    toks = sum(len(r.out) for r in ok)
+    print(f"served {len(ok)}/{len(done)} requests "
+          f"({timed_out} timeout, {rejects} backpressure-shed), "
+          f"{toks} tokens in {wall:.2f}s ({toks / wall:.1f} tok/s, {extra})")
+    for rid in sorted(out):
+        tag = "" if done[rid].status == "ok" else f" [{done[rid].status}]"
+        print(f"  req {rid}{tag}: {out[rid][:8]}"
+              f"{'...' if len(out[rid]) > 8 else ''}")
+
+
+# ------------------------------------------------------------ single process
+def _run_engine(args: argparse.Namespace) -> None:
     arch = get_arch(args.arch)
     if arch.lm is None:
         raise SystemExit(f"{args.arch} is not an LM arch")
     cfg = arch.smoke_config()
     params = lm.init(jax.random.PRNGKey(args.seed), cfg)
-    engine = ServeEngine(params, cfg,
-                         ServeConfig(slots=args.slots, max_len=args.max_len,
-                                     max_new_tokens=args.max_new_tokens,
-                                     temperature=args.temperature),
+    engine = ServeEngine(params, cfg, _serve_config(args),
                          planes=args.planes, seed=args.seed)
-    rng = np.random.default_rng(args.seed)
-    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(4, 17)))
-               for _ in range(args.requests)]
+    prompts = _prompts(args, cfg.vocab)
 
     rejects = 0
     t0 = time.perf_counter()
@@ -64,6 +91,7 @@ def main() -> None:
             engine.submit(p, deadline_s=args.deadline)
         out = engine.run()
     else:
+        rng = np.random.default_rng(args.seed)
         arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
         i = 0
         while i < len(arrivals) or engine.active_lanes() or len(engine.router.queue):
@@ -80,20 +108,138 @@ def main() -> None:
         out = engine.router.results()
     wall = time.perf_counter() - t0
 
-    done = engine.router.done
-    ok = [r for r in done.values() if r.status == "ok"]
-    timed_out = len(done) - len(ok)
-    toks = sum(len(r.out) for r in ok)
     mesh = engine.planes[0].mesh
-    print(f"served {len(ok)}/{len(done)} requests "
-          f"({timed_out} timeout, {rejects} backpressure-shed), "
-          f"{toks} tokens in {wall:.2f}s ({toks / wall:.1f} tok/s, "
-          f"planes={args.planes} slots={args.slots} "
-          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))})")
-    for rid in sorted(out):
-        tag = "" if done[rid].status == "ok" else f" [{done[rid].status}]"
-        print(f"  req {rid}{tag}: {out[rid][:8]}"
-              f"{'...' if len(out[rid]) > 8 else ''}")
+    extra = (f"planes={args.planes} slots={args.slots} "
+             f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    if args.block_size:
+        pool = engine.planes[0].pool
+        extra += (f" paged[bs={args.block_size} blocks={pool.num_blocks} "
+                  f"cache={engine.planes[0].cache_bytes() / 1e6:.1f}MB]")
+    _report(engine.router.done, out, wall, rejects, extra)
+
+
+# ------------------------------------------------------------------- worker
+def _run_worker(args: argparse.Namespace) -> None:
+    """One serving host of an elastic fleet (see ``ServeWorker``)."""
+    from repro.distributed.transport import FileHeartbeatTransport
+
+    arch = get_arch(args.arch)
+    cfg = arch.smoke_config()
+    params = lm.init(jax.random.PRNGKey(args.seed), cfg)
+    spool = os.path.join(args.fleet_dir, f"w{args.worker_id}_a{args.attempt}")
+    worker = ServeWorker(
+        params, cfg, _serve_config(args),
+        worker_id=args.worker_id, attempt=args.attempt,
+        inbox=FileMailbox(os.path.join(spool, "in")),
+        outbox=FileMailbox(os.path.join(spool, "out")),
+        heartbeat=FileHeartbeatTransport(os.path.join(args.fleet_dir, "hb")))
+    worker.run()
+
+
+# -------------------------------------------------------------- coordinator
+def _run_fleet(args: argparse.Namespace) -> None:
+    """Coordinator: spawn per-host workers, drive the fleet, shut it down."""
+    from repro.distributed.transport import FileHeartbeatTransport
+
+    arch = get_arch(args.arch)
+    if arch.lm is None:
+        raise SystemExit(f"{args.arch} is not an LM arch")
+    cfg = arch.smoke_config()
+    fleet_dir = args.fleet_dir or tempfile.mkdtemp(prefix="serve-fleet-")
+    hb = FileHeartbeatTransport(os.path.join(fleet_dir, "hb"))
+    fleet = FleetEngine(_serve_config(args), world=args.planes,
+                        hb_timeout=args.hb_timeout,
+                        step_feed=lambda: hb.step_feed(0, args.planes))
+
+    procs = []
+    for wid in range(args.planes):
+        spool = os.path.join(fleet_dir, f"w{wid}_a0")
+        fleet.attach(wid, attempt=0,
+                     send=FileMailbox(os.path.join(spool, "in")),
+                     recv=FileMailbox(os.path.join(spool, "out")))
+        argv = [sys.executable, "-m", "repro.launch.serve", "--role", "worker",
+                "--fleet-dir", fleet_dir, "--worker-id", str(wid),
+                "--arch", args.arch, "--slots", str(args.slots),
+                "--max-len", str(args.max_len),
+                "--max-new-tokens", str(args.max_new_tokens),
+                "--temperature", str(args.temperature),
+                "--block-size", str(args.block_size),
+                "--pool-blocks", str(args.pool_blocks),
+                "--seed", str(args.seed)]
+        procs.append(subprocess.Popen(argv))
+    print(f"# fleet: {args.planes} workers, mailboxes under {fleet_dir}")
+
+    prompts = _prompts(args, cfg.vocab)
+    t0 = time.perf_counter()
+    for p in prompts:
+        fleet.submit(p, deadline_s=args.deadline)
+    try:
+        while fleet.pending():
+            fleet.tick()
+            time.sleep(0.02)
+    finally:
+        fleet.stop_workers()
+        for p in procs:
+            try:
+                p.wait(timeout=30)
+            except subprocess.TimeoutExpired:
+                p.kill()
+    wall = time.perf_counter() - t0
+    served = {wid: w.served for wid, w in fleet.workers.items()}
+    _report(fleet.router.done, fleet.results(), wall, 0,
+            f"workers={args.planes} slots/worker={args.slots} "
+            f"served-per-worker={served}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--role", choices=("engine", "fleet", "worker"),
+                    default="engine",
+                    help="engine: in-process fleet (default); fleet: spawn "
+                         "per-host worker processes and coordinate them; "
+                         "worker: one serving host (spawned by --role fleet)")
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode lanes per plane")
+    ap.add_argument("--planes", type=int, default=1,
+                    help="inference planes (engine: in-process slot pools; "
+                         "fleet: worker PROCESSES, one plane each)")
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="paged-KV block size in tokens (0 = contiguous "
+                         "per-slot cache lines)")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="usable blocks in the paged pool (0 = contiguous "
+                         "capacity, slots*ceil(max_len/block_size); size it "
+                         "to expected LIVE tokens for the memory win)")
+    ap.add_argument("--trace", choices=("batch", "poisson"), default="batch",
+                    help="batch: submit all up front; poisson: timed arrivals")
+    ap.add_argument("--rate", type=float, default=30.0,
+                    help="poisson arrival rate, requests/second")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline in seconds (default: none)")
+    ap.add_argument("--fleet-dir", default=None,
+                    help="shared mailbox/heartbeat dir for --role "
+                         "fleet/worker (fleet default: a fresh tempdir)")
+    ap.add_argument("--worker-id", type=int, default=0)
+    ap.add_argument("--attempt", type=int, default=0,
+                    help="worker mailbox incarnation (bumped on relaunch)")
+    ap.add_argument("--hb-timeout", type=float, default=10.0,
+                    help="seconds of beat silence before a worker is "
+                         "declared dead and its work re-prefilled")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.role == "worker":
+        if args.fleet_dir is None:
+            raise SystemExit("--role worker requires --fleet-dir")
+        _run_worker(args)
+    elif args.role == "fleet":
+        _run_fleet(args)
+    else:
+        _run_engine(args)
 
 
 if __name__ == "__main__":

@@ -230,6 +230,31 @@ def cache_shardings(cache_shape: Any, cfg, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(one, cache_shape)
 
 
+def paged_cache_shardings(cache_shape: Any, cfg, mesh: Mesh, mask):
+    """Shardings for a paged pool (``lm.init_paged_cache``).
+
+    Paged leaves ``[R, num_blocks, block_size, ...]`` shard the BLOCKS axis
+    over the data axes when divisible (the plane pads the pool to a dp
+    multiple) — block-table gathers across a blocks-sharded pool lower to a
+    collective gather, which is correct under any table contents; the
+    null-block row replicates with its shard.  Per-lane (unpaged) leaves keep
+    the ``cache_shardings`` rules.  ``mask``: ``lm.paged_cache_mask(cfg)``.
+    """
+    dp = dp_axes(mesh)
+    dp_n = int(np.prod([mesh.shape[a] for a in dp]))
+    contiguous = cache_shardings(cache_shape, cfg, mesh)
+
+    def one(is_paged, leaf, fallback):
+        if not is_paged:
+            return fallback
+        spec: list = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 2 and _div(leaf.shape[1], dp_n):
+            spec[1] = dp if len(dp) > 1 else dp[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, mask, cache_shape, contiguous)
+
+
 # -------------------------------------------------------------------- ST-GNN
 def stgnn_param_shardings(params_shape: Any, mesh: Mesh):
     """DCRNN-family params are tiny (hidden 64) — replicate (the paper's DDP)."""

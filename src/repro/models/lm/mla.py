@@ -71,18 +71,35 @@ def mla_attention(p, cfg: LMConfig, x, positions, *, blockwise: bool = False):
     return y, (c_kv, k_pe)
 
 
-def mla_decode(p, cfg: LMConfig, x1, ckv_cache, kpe_cache, lengths):
+def mla_decode(p, cfg: LMConfig, x1, ckv_cache, kpe_cache, lengths, *, paged=None):
     """Absorbed one-token decode.  x1: [B, 1, d]; caches: [B, S_max, r]/[B, S_max, dr].
 
     Returns (y [B,1,d], updated ckv_cache, updated kpe_cache).
+
+    ``paged``: optional ``(tables, block_size)`` when the caches are paged
+    pools ``[num_blocks, block_size, r]`` — the new latent is written at its
+    (physical block, offset) and attention runs over the block-table gathered
+    view; the returned caches stay in pool layout.
     """
     m = cfg.mla
     b = x1.shape[0]
     pos = lengths[:, None]  # [B,1] absolute position of the new token
     qn, qr = _project_q(p, cfg, x1, pos)
     c_new, kpe_new = _project_ckv(p, cfg, x1, pos)
-    ckv = ckv_cache.at[jnp.arange(b), lengths].set(c_new[:, 0])
-    kpe = kpe_cache.at[jnp.arange(b), lengths].set(kpe_new[:, 0])
+    if paged is None:
+        ckv_upd = ckv_cache.at[jnp.arange(b), lengths].set(c_new[:, 0])
+        kpe_upd = kpe_cache.at[jnp.arange(b), lengths].set(kpe_new[:, 0])
+        ckv, kpe = ckv_upd, kpe_upd
+    else:
+        tables, bs = paged
+        phys = tables[jnp.arange(b), lengths // bs]
+        off = lengths % bs
+        ckv_upd = ckv_cache.at[phys, off].set(c_new[:, 0])
+        kpe_upd = kpe_cache.at[phys, off].set(kpe_new[:, 0])
+        # per-lane gathered view [B, max_blocks*bs, r]; positions past
+        # lengths are masked below, so stale block tails cannot contribute
+        ckv = ckv_upd[tables].reshape(b, -1, ckv_upd.shape[-1])
+        kpe = kpe_upd[tables].reshape(b, -1, kpe_upd.shape[-1])
 
     # Absorb W_uk: q_lat[h] = W_uk[h]^T q_nope[h]  -> score against c_kv directly.
     wukv = p["wukv"]["w"].reshape(m.kv_lora_rank, cfg.n_heads, m.qk_nope_head_dim + m.v_head_dim)
@@ -100,4 +117,4 @@ def mla_decode(p, cfg: LMConfig, x1, ckv_cache, kpe_cache, lengths):
     ctx = jnp.einsum("bhqk,bkr->bqhr", probs.astype(ckv.dtype), ckv)
     v = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv.astype(x1.dtype))
     y = linear(p["wo"], v.reshape(b, 1, -1))
-    return y, ckv, kpe
+    return y, ckv_upd, kpe_upd

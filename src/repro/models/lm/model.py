@@ -154,15 +154,23 @@ def init(rng, cfg: LMConfig):
 
 # -------------------------------------------------------------------- mixers
 def _attn_mixer(p, cfg: LMConfig, spec: LayerSpec, x, positions, *, mode,
-                cache=None, lengths=None, shardings=None):
-    """Returns (out, new_cache).  cache layout depends on mixer/mode."""
+                cache=None, lengths=None, shardings=None, paged=None):
+    """Returns (out, new_cache).  cache layout depends on mixer/mode.
+
+    ``paged``: optional ``(tables, block_size)`` for decode against a paged
+    pool (``init_paged_cache``) — ``tables`` is int32 ``[B, max_blocks]``
+    mapping each lane's logical block index to a physical block.  Applies to
+    seq-dim caches only (full-attn k/v, MLA ckv/kpe); swa rings and recurrent
+    state stay per-lane.
+    """
     b, s, _ = x.shape
     hd = cfg.hd
     window = cfg.window if spec.mixer == "swa" else None
 
     if spec.mixer == "mla":
         if mode == "decode":
-            y, ckv, kpe = mla_decode(p["attn"], cfg, x, cache["ckv"], cache["kpe"], lengths)
+            y, ckv, kpe = mla_decode(p["attn"], cfg, x, cache["ckv"], cache["kpe"], lengths,
+                                     paged=paged)
             return y, {"ckv": ckv, "kpe": kpe}
         blockwise = s > BLOCKWISE_THRESHOLD
         y, (c_kv, k_pe) = mla_attention(p["attn"], cfg, x, positions, blockwise=blockwise)
@@ -198,6 +206,24 @@ def _attn_mixer(p, cfg: LMConfig, spec: LayerSpec, x, positions, *, mode,
             vc = cache["v"].at[jnp.arange(b), slot].set(v[:, 0])
             n_valid = jnp.minimum(lengths + 1, window)
             out = _ring_decode(q, kc, vc, n_valid)
+            new_cache = {"k": kc, "v": vc}
+        elif paged is not None:
+            # paged pool: write the token's k/v at (physical block, offset),
+            # then attend against the block-table gathered view.  The gather
+            # happens HERE, per layer inside the scan body, so the transient
+            # is one layer's [B, max_blocks*bs] view — never the whole pool.
+            tables, bs = paged
+            phys = tables[jnp.arange(b), lengths // bs]
+            off = lengths % bs
+            kc = cache["k"].at[phys, off].set(k[:, 0])
+            vc = cache["v"].at[phys, off].set(v[:, 0])
+            kv = kc[tables].reshape(b, -1, cfg.n_kv_heads, hd)
+            vv = vc[tables].reshape(b, -1, cfg.n_kv_heads, hd)
+            # positions >= lengths+1 (unwritten block tails, null-block rows
+            # of dead lanes) hold stale-but-finite garbage; the mask zeroes
+            # them exactly, so the view is bit-equivalent to the contiguous
+            # cache whenever max_blocks*bs == max_len
+            out = decode_attention(q, kv, vv, lengths + 1)
             new_cache = {"k": kc, "v": vc}
         else:
             kc = cache["k"].at[jnp.arange(b), lengths].set(k[:, 0])
@@ -251,7 +277,7 @@ def _ring_decode(q1, k_ring, v_ring, n_valid):
 
 # --------------------------------------------------------------------- layers
 def _layer_apply(p, cfg: LMConfig, spec: LayerSpec, x, positions, *, mode,
-                 cache=None, lengths=None, shardings=None):
+                 cache=None, lengths=None, shardings=None, paged=None):
     """One block.  Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = rms_norm(x, p["norm1"].astype(x.dtype), cfg.norm_eps)
@@ -265,7 +291,7 @@ def _layer_apply(p, cfg: LMConfig, spec: LayerSpec, x, positions, *, mode,
     else:
         out, new_mix_cache = _attn_mixer(p, cfg, spec, h, positions, mode=mode,
                                          cache=cache, lengths=lengths,
-                                         shardings=shardings)
+                                         shardings=shardings, paged=paged)
     x = x + out
 
     if spec.ffn == "rwkv":
@@ -288,7 +314,7 @@ def _layer_apply(p, cfg: LMConfig, spec: LayerSpec, x, positions, *, mode,
 
 
 def _run_stages(params, cfg: LMConfig, x, positions, *, mode, caches=None,
-                lengths=None, remat=False, shardings=None):
+                lengths=None, remat=False, shardings=None, paged=None):
     """Scan over each stage's repeats.  Returns (x, new_caches, aux_total)."""
     plan = stage_plan(cfg)
     aux_total = jnp.zeros((), jnp.float32)
@@ -304,7 +330,7 @@ def _run_stages(params, cfg: LMConfig, x, positions, *, mode, caches=None,
                 sub_c = None if lc is None else lc[f"sub{i}"]
                 xx, nc, aux = _layer_apply(lp[f"sub{i}"], cfg, sp, xx, positions,
                                            mode=mode, cache=sub_c, lengths=lengths,
-                                           shardings=shardings)
+                                           shardings=shardings, paged=paged)
                 xx = _constrain(xx, shardings, "act")
                 out_caches[f"sub{i}"] = nc
                 aux_acc = aux_acc + aux
@@ -446,6 +472,109 @@ def scatter_cache(cache, sub, slots):
     return jax.tree.map(put, cache, sub)
 
 
+# ------------------------------------------------------------ paged KV-cache
+def init_paged_cache(cfg: LMConfig, batch: int, max_len: int, *,
+                     num_blocks: int, block_size: int):
+    """Paged cache pool: seq-dim leaves become shared block pools.
+
+    Full-attn k/v and MLA ckv/kpe leaves are ``[repeats, num_blocks,
+    block_size, ...]`` — one pool per layer, shared by every lane through
+    per-lane block tables (``serve.blocks.BlockPool`` owns the allocation;
+    physical block 0 is the null block).  Per-lane state with no paged seq
+    dim (swa rings, RG-LRU / RWKV recurrent state) keeps the ``init_cache``
+    layout ``[repeats, batch, ...]``.
+    """
+    cdtype = jnp.dtype(cfg.dtype)
+    hd = cfg.hd
+
+    def one_layer(spec: LayerSpec):
+        if spec.mixer == "full":
+            return {"k": jnp.zeros((num_blocks, block_size, cfg.n_kv_heads, hd), cdtype),
+                    "v": jnp.zeros((num_blocks, block_size, cfg.n_kv_heads, hd), cdtype)}
+        if spec.mixer == "swa":
+            w = min(cfg.window, max_len)
+            return {"k": jnp.zeros((batch, w, cfg.n_kv_heads, hd), cdtype),
+                    "v": jnp.zeros((batch, w, cfg.n_kv_heads, hd), cdtype)}
+        if spec.mixer == "mla":
+            m = cfg.mla
+            return {"ckv": jnp.zeros((num_blocks, block_size, m.kv_lora_rank), cdtype),
+                    "kpe": jnp.zeros((num_blocks, block_size, m.qk_rope_head_dim), cdtype)}
+        if spec.mixer == "rec":
+            return rglru.init_rglru_cache(cfg, batch, cdtype)
+        if spec.mixer == "rwkv":
+            return rwkv6.init_rwkv_cache(cfg, batch, cdtype)
+        return {}
+
+    caches = []
+    for specs, repeats in stage_plan(cfg):
+        layer = {f"sub{i}": one_layer(sp) for i, sp in enumerate(specs)}
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (repeats,) + a.shape), layer))
+    return caches
+
+
+def paged_cache_mask(cfg: LMConfig):
+    """Bool pytree congruent with the cache: True at paged (seq-dim) leaves.
+
+    Decided per layer SPEC, not by shape — a swa ring whose window happens to
+    equal ``max_len`` must still take the ring decode path, not the paged one.
+    """
+    def one_layer(spec: LayerSpec):
+        if spec.mixer == "full":
+            return {"k": True, "v": True}
+        if spec.mixer == "swa":
+            return {"k": False, "v": False}
+        if spec.mixer == "mla":
+            return {"ckv": True, "kpe": True}
+        if spec.mixer == "rec":
+            shapes = jax.eval_shape(lambda: rglru.init_rglru_cache(cfg, 1, jnp.float32))
+            return jax.tree.map(lambda _: False, shapes)
+        if spec.mixer == "rwkv":
+            shapes = jax.eval_shape(lambda: rwkv6.init_rwkv_cache(cfg, 1, jnp.float32))
+            return jax.tree.map(lambda _: False, shapes)
+        return {}
+
+    return [{f"sub{i}": one_layer(sp) for i, sp in enumerate(specs)}
+            for specs, _ in stage_plan(cfg)]
+
+
+def scatter_cache_paged(cache, sub, slots, phys, *, block_size: int, mask):
+    """Land a k-batch contiguous prefill cache into a paged pool.
+
+    ``cache``: pool from ``init_paged_cache``.  ``sub``: a contiguous
+    prefill-output cache with batch k (seq dim = the sub cache's line
+    length).  ``slots``: int32 ``[k]`` lane ids, used for the per-lane
+    (unpaged) leaves exactly like ``scatter_cache``.  ``phys``: int32
+    ``[k, nb]`` physical block ids covering logical positions
+    ``0..nb*block_size`` of each lane — the prompt's blocks.  ``mask``:
+    ``paged_cache_mask(cfg)``.
+
+    Paged leaves reshape the sub line into ``nb`` blocks and scatter them to
+    their physical rows in one fused update; positions past the prompt inside
+    the last block are zero-filled (masked by lane lengths until decode
+    overwrites them).
+    """
+    slots = jnp.asarray(slots, jnp.int32)
+    phys = jnp.asarray(phys, jnp.int32)
+    nb = phys.shape[1]
+
+    def put(is_paged, big, small):
+        small = small.astype(big.dtype)
+        if not is_paged:
+            return big.at[:, slots].set(small)
+        r, k, s = small.shape[:3]
+        want = nb * block_size
+        if s > want:
+            small = small[:, :, :want]
+        elif s < want:
+            widths = [(0, 0), (0, 0), (0, want - s)] + [(0, 0)] * (small.ndim - 3)
+            small = jnp.pad(small, widths)
+        small = small.reshape((r, k, nb, block_size) + small.shape[3:])
+        return big.at[:, phys].set(small)
+
+    return jax.tree.map(put, mask, cache, sub)
+
+
 def prefill(params, cfg: LMConfig, tokens, cache, *, prefix_embeds=None,
             shardings=None):
     """Fill the cache from a prompt.  Returns (last-token logits, cache, lengths)."""
@@ -459,12 +588,19 @@ def prefill(params, cfg: LMConfig, tokens, cache, *, prefix_embeds=None,
     return logits, new_caches, lengths
 
 
-def decode_step(params, cfg: LMConfig, token, cache, lengths, *, shardings=None):
-    """One decode step.  token: [B, 1] -> (logits [B, V], new cache)."""
+def decode_step(params, cfg: LMConfig, token, cache, lengths, *, shardings=None,
+                paged=None):
+    """One decode step.  token: [B, 1] -> (logits [B, V], new cache).
+
+    ``paged``: optional ``(tables, block_size)`` when ``cache`` is a paged
+    pool from ``init_paged_cache`` — tables map each lane's logical blocks to
+    physical pool blocks; per-layer writes/gathers go through them inside the
+    stage scan (see ``_attn_mixer``).
+    """
     x, positions = embed_tokens(params, cfg, token, pos_offset=lengths)
     x = _constrain(x, shardings, "act")
     x, new_caches, _ = _run_stages(params, cfg, x, positions, mode="decode",
                                    caches=cache, lengths=lengths,
-                                   shardings=shardings)
+                                   shardings=shardings, paged=paged)
     x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
     return logits_fn(params, cfg, x[:, 0]), new_caches

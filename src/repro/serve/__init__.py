@@ -4,17 +4,27 @@
   pinned bit-identical to manual decode.
 - ``InferencePlane`` — one host's sharded slot pool + jitted prefill/decode
   over a (data × model) mesh.
+- ``PagedInferencePlane``/``BlockPool`` — paged KV: fixed-size cache blocks
+  from a shared pool, so slot memory scales with live tokens instead of
+  ``max_len × slots``; pool exhaustion backpressures instead of OOM-ing.
 - ``Router`` — bounded admission (``Backpressure``), deadlines, prompt-length
-  grouping for batched prefill.
+  grouping for batched prefill, block-budget accounting for paged pools.
 - ``ServeEngine`` — Router + plane fleet; greedy output pinned bit-identical
   to ``Server``.
+- ``ServeWorker``/``FleetEngine`` — elastic fleet: per-host worker processes
+  announcing through heartbeat transports; the coordinator re-prefills a dead
+  worker's in-flight requests on survivors and re-admits returning hosts.
 """
+from repro.serve.blocks import BlockPool, NULL_BLOCK
 from repro.serve.common import count_transfers, device_get
 from repro.serve.engine import ServeEngine
-from repro.serve.plane import InferencePlane
+from repro.serve.fleet import FileMailbox, FleetEngine, LocalMailbox, ServeWorker
+from repro.serve.plane import InferencePlane, PagedInferencePlane
 from repro.serve.router import Backpressure, Router, ServeRequest
 from repro.serve.server import ServeConfig, Server, validate_request
 
-__all__ = ["Backpressure", "InferencePlane", "Router", "ServeConfig",
-           "ServeEngine", "ServeRequest", "Server", "count_transfers",
+__all__ = ["Backpressure", "BlockPool", "FileMailbox", "FleetEngine",
+           "InferencePlane", "LocalMailbox", "NULL_BLOCK",
+           "PagedInferencePlane", "Router", "ServeConfig", "ServeEngine",
+           "ServeRequest", "ServeWorker", "Server", "count_transfers",
            "device_get", "validate_request"]

@@ -23,13 +23,20 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.models.lm.config import LMConfig
-from repro.serve.plane import InferencePlane
+from repro.serve.plane import InferencePlane, PagedInferencePlane
 from repro.serve.router import Router, ServeRequest
-from repro.serve.server import ServeConfig
+from repro.serve.server import ServeConfig, validate_request
 
 
 class ServeEngine:
-    """Continuous-batching engine over one or more sharded slot pools."""
+    """Continuous-batching engine over one or more sharded slot pools.
+
+    ``serve.block_size`` selects the plane flavour: None builds contiguous
+    ``InferencePlane`` pools; a block size builds ``PagedInferencePlane``
+    pools and admission accounts pool BLOCKS (through ``Router.pop_group``'s
+    block budget) on top of free lanes, so a full pool backpressures at the
+    router instead of OOM-ing a prefill.
+    """
 
     def __init__(self, params, cfg: LMConfig, serve: ServeConfig, *,
                  planes: int = 1, mesh: Mesh | None = None,
@@ -37,6 +44,7 @@ class ServeEngine:
                  prefill_token_budget: int | None = None,
                  seed: int = 0, clock: Callable[[], float] = time.monotonic):
         self.serve = serve
+        self.paged = serve.block_size is not None
         #: default backpressure bound: 4 waves of the whole fleet
         if queue_limit is None:
             queue_limit = 4 * planes * serve.slots
@@ -45,8 +53,8 @@ class ServeEngine:
                                      or max(serve.max_len, 512))
         # device_put inside each plane dedupes: already-committed shards are
         # reused, so N planes share ONE device copy of the weights
-        self.planes = [InferencePlane(params, cfg, serve, mesh=mesh,
-                                      seed=seed + i)
+        plane_cls = PagedInferencePlane if self.paged else InferencePlane
+        self.planes = [plane_cls(params, cfg, serve, mesh=mesh, seed=seed + i)
                        for i in range(planes)]
         self.active: list[list[ServeRequest | None]] = [
             [None] * serve.slots for _ in self.planes]
@@ -54,7 +62,23 @@ class ServeEngine:
     # ------------------------------------------------------------------ queue
     def submit(self, prompt_tokens, *, max_new_tokens: int | None = None,
                deadline_s: float | None = None) -> int:
-        """Admit a request (raises ``Backpressure`` / ``ValueError``)."""
+        """Admit a request (raises ``Backpressure`` / ``ValueError``).
+
+        Paged pools add one admission rule: a request whose lifetime block
+        cost exceeds the POOL's capacity can never run and is rejected with
+        ``ValueError`` here (a full-but-draining pool is ``Backpressure``
+        territory and handled by the router's block accounting instead).
+        """
+        if self.paged:
+            prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
+            budget = validate_request(self.serve, prompt, max_new_tokens)
+            plane = self.planes[0]
+            need = plane.block_cost(prompt.size, budget)
+            if need > plane.pool.num_blocks:
+                raise ValueError(
+                    f"request needs {need} blocks; the pool only has "
+                    f"{plane.pool.num_blocks} — raise pool_blocks or shorten "
+                    f"the request")
         return self.router.submit(prompt_tokens, max_new_tokens=max_new_tokens,
                                   deadline_s=deadline_s)
 
@@ -83,27 +107,44 @@ class ServeEngine:
                 if req is not None and self.router.past_deadline(req):
                     self._retire(pi, slot, req, status="timeout")
 
-        # admission: batched prefill into free lanes, least-loaded plane first
+        # admission: batched prefill into free lanes, least-loaded plane
+        # first; a plane whose BLOCK pool can't take the group's leader is
+        # skipped (another plane may have the blocks)
         while self.router.queue:
-            frees = [(len(p.free_slots()), pi) for pi, p in enumerate(self.planes)]
-            n_free, pi = max(frees)
-            if n_free == 0:
-                break
-            plane = self.planes[pi]
-            group = self.router.pop_group(n_free, self.prefill_token_budget)
-            if not group:
-                break
-            slots = plane.free_slots()[:len(group)]
-            prompts = np.stack([r.prompt for r in group])
-            toks = plane.prefill_into(slots, prompts)
-            for req, slot, tok in zip(group, slots, toks):
-                req.out.append(int(tok))
-                if self._should_retire(req, int(tok)):
-                    # retired AT the prefill token (budget 1 / EOS first):
-                    # the lane frees immediately for this same step
-                    self._retire(pi, slot, req)
+            order = sorted(((len(p.free_slots()), pi)
+                            for pi, p in enumerate(self.planes)), reverse=True)
+            popped = False
+            for n_free, pi in order:
+                if n_free == 0:
+                    continue
+                plane = self.planes[pi]
+                if self.paged:
+                    group = self.router.pop_group(
+                        n_free, self.prefill_token_budget,
+                        block_budget=plane.free_blocks(),
+                        block_cost=lambda r, p=plane: p.block_cost(
+                            r.prompt.size, r.budget))
                 else:
-                    self.active[pi][slot] = req
+                    group = self.router.pop_group(n_free,
+                                                  self.prefill_token_budget)
+                if not group:
+                    continue
+                slots = plane.free_slots()[:len(group)]
+                prompts = np.stack([r.prompt for r in group])
+                toks = plane.prefill_into(slots, prompts,
+                                          budgets=[r.budget for r in group])
+                for req, slot, tok in zip(group, slots, toks):
+                    req.out.append(int(tok))
+                    if self._should_retire(req, int(tok)):
+                        # retired AT the prefill token (budget 1 / EOS first):
+                        # the lane frees immediately for this same step
+                        self._retire(pi, slot, req)
+                    else:
+                        self.active[pi][slot] = req
+                popped = True
+                break
+            if not popped:
+                break
 
         # one batched decode step per plane with live lanes
         for pi, (plane, pool) in enumerate(zip(self.planes, self.active)):

@@ -2,11 +2,21 @@
 
 The serving analogue of the training DataPlane/Engine split: a plane owns
 every device-resident object (weights, the slot-pool KV cache, the jitted
-prefill/decode programs) for ONE host's pool, laid out over a (data × model)
-mesh with the exact shardings ``launch/dryrun.py`` proves compile for the
-production decode/prefill cells (``shd.lm_param_shardings`` with no FSDP,
-``shd.cache_shardings``, ``act_hints`` activation pins).  The engine above it
-only moves token ids and bookkeeping.
+prefill/decode programs) for ONE host's pool.  The engine above it only
+moves token ids and bookkeeping.
+
+Sharding contract (the (data x model) mesh):  every jitted program takes
+explicit ``in_shardings``/``out_shardings`` over the mesh
+``launch.mesh.make_host_mesh`` builds — params via ``shd.lm_param_shardings``
+with NO FSDP (decode re-gathers FSDP shards every token, so serving keeps
+params TP-sharded only), the cache via ``shd.cache_shardings`` (batch over
+the data axes, sequence over model) or ``shd.paged_cache_shardings`` (blocks
+over data), activations pinned by ``act_hints``.  The lane row (tokens,
+lengths) shards over data only when ``slots`` divides the dp extent, else it
+replicates — correct either way, and ``launch/dryrun.py`` proves these specs
+compile for the production decode/prefill cells.  Every plane calls
+``jax.device_put`` with the same param shardings, so N planes share ONE
+device copy of the weights.
 
 Two jitted programs:
 
@@ -20,9 +30,20 @@ Two jitted programs:
   single-host server's per-request init_cache + per-request scatter chain,
   the fill path's main waste.
 
-Decode bookkeeping (lengths, next tokens) is host-resident numpy; the only
-blocking sync per decode step is the single ``device_get`` of the sampled
-token row (see ``repro.serve.common``).
+One-pull-per-step invariant: decode bookkeeping (lengths, next tokens, block
+tables) is host-resident numpy, uploaded as arguments; the only blocking
+device->host sync per decode step (and per prefill group) is the single
+``common.device_get`` of the sampled token row.  ``common.count_transfers``
+counts these, and the serving tests pin the exact per-step totals — adding a
+second pull per step fails an assertion instead of silently regressing p99.
+
+``PagedInferencePlane`` swaps the contiguous per-slot cache lines for a
+shared block pool (``serve.blocks.BlockPool``) with per-lane block tables:
+slot memory then scales with the pool you provision (live tokens), not
+``max_len x slots``.  Greedy outputs are bit-identical to the contiguous
+plane whenever ``block_size`` divides ``max_len`` (the gathered view is then
+exactly the contiguous cache), and the admission seam reports block costs so
+the Router can account blocks instead of whole slots.
 """
 from __future__ import annotations
 
@@ -34,6 +55,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models.lm import model as lm
 from repro.models.lm.config import LMConfig
 from repro.serve import common
+from repro.serve.blocks import BlockPool
 from repro.serve.server import ServeConfig
 
 
@@ -47,32 +69,16 @@ class InferencePlane:
     def __init__(self, params, cfg: LMConfig, serve: ServeConfig, *,
                  mesh: Mesh | None = None, seed: int = 0):
         from repro.launch import sharding as shd
-        from repro.launch.mesh import dp_axes, dp_size, make_host_mesh
-        from repro.launch.specs import act_hints
 
         self.cfg = cfg
         self.serve = serve
-        self.mesh = mesh = mesh or make_host_mesh()
-        self._key = jax.random.PRNGKey(seed)
+        param_sh, lane_sh, rep, hints = self._common_setup(params, cfg, serve,
+                                                           mesh, seed)
 
         b, s = serve.slots, serve.max_len
-        params_shape = jax.eval_shape(lambda: params)
-        param_sh = shd.lm_param_shardings(params_shape, cfg, mesh, fsdp=())
-        self.params = jax.device_put(params, param_sh)
         cache_shape = jax.eval_shape(lambda: lm.init_cache(cfg, b, s))
-        cache_sh = shd.cache_shardings(cache_shape, cfg, mesh)
+        cache_sh = shd.cache_shardings(cache_shape, cfg, self.mesh)
         self.cache = jax.device_put(lm.init_cache(cfg, b, s), cache_sh)
-
-        # lane row shardings: batch over the data axes when the pool divides
-        dp = dp_axes(mesh)
-        lane_spec = P(dp if len(dp) > 1 else dp[0]) if _div(b, dp_size(mesh)) else P()
-        lane_sh = NamedSharding(mesh, lane_spec)
-        rep = NamedSharding(mesh, P())
-        hints = act_hints(cfg, mesh)
-
-        # host-resident decode bookkeeping — uploaded as args, never pulled
-        self.lengths = np.zeros((b,), np.int32)
-        self.tokens = np.zeros((b, 1), np.int32)
 
         self._decode = jax.jit(
             lambda p, tok, cache, lengths: lm.decode_step(
@@ -93,6 +99,33 @@ class InferencePlane:
                                 in_shardings=(cache_sh, None, None),
                                 out_shardings=cache_sh, donate_argnums=(0,))
 
+    def _common_setup(self, params, cfg, serve, mesh, seed):
+        """Mesh + param placement + lane-row shardings shared by both plane
+        flavours.  Returns (param_sh, lane_sh, replicated, act hints)."""
+        from repro.launch import sharding as shd
+        from repro.launch.mesh import dp_axes, dp_size, make_host_mesh
+        from repro.launch.specs import act_hints
+
+        self.mesh = mesh = mesh or make_host_mesh()
+        self._key = jax.random.PRNGKey(seed)
+        params_shape = jax.eval_shape(lambda: params)
+        param_sh = shd.lm_param_shardings(params_shape, cfg, mesh, fsdp=())
+        # device_put dedupes: already-committed shards are reused, so every
+        # plane shares ONE device copy of the weights
+        self.params = jax.device_put(params, param_sh)
+
+        b = serve.slots
+        # lane row shardings: batch over the data axes when the pool divides
+        dp = dp_axes(mesh)
+        lane_spec = P(dp if len(dp) > 1 else dp[0]) if _div(b, dp_size(mesh)) else P()
+        lane_sh = NamedSharding(mesh, lane_spec)
+        rep = NamedSharding(mesh, P())
+
+        # host-resident decode bookkeeping — uploaded as args, never pulled
+        self.lengths = np.zeros((b,), np.int32)
+        self.tokens = np.zeros((b, 1), np.int32)
+        return param_sh, lane_sh, rep, act_hints(cfg, mesh)
+
     # ---------------------------------------------------------------- sampling
     def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
         if self.serve.temperature <= 0.0:
@@ -106,11 +139,19 @@ class InferencePlane:
         """Lanes with no resident sequence (length 0 = masked/never filled)."""
         return [i for i in range(self.serve.slots) if self.lengths[i] == 0]
 
-    def prefill_into(self, slots: list[int], prompts: np.ndarray) -> np.ndarray:
+    def cache_bytes(self) -> int:
+        """Resident device bytes of this plane's KV cache (pool or lines)."""
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.cache))
+
+    def prefill_into(self, slots: list[int], prompts: np.ndarray,
+                     budgets: list[int] | None = None) -> np.ndarray:
         """Batched prefill of ``[k, plen]`` prompts into ``slots`` (len k).
 
-        Returns the k sampled first tokens (host).  One device→host pull for
-        the whole group.
+        ``budgets`` (per-request remaining token budgets) is accepted for
+        interface parity with the paged plane, which sizes each lane's block
+        allocation from it; the contiguous plane's lanes are pre-sized to
+        ``max_len`` so it is unused here.  Returns the k sampled first tokens
+        (host).  One device->host pull for the whole group.
         """
         assert prompts.ndim == 2 and prompts.shape[0] == len(slots)
         logits, sub = self._prefill(self.params, jnp.asarray(prompts, jnp.int32))
@@ -139,3 +180,138 @@ class InferencePlane:
         touch its stale state (the cache slice is replaced at next prefill)."""
         self.lengths[slot] = 0
         self.tokens[slot, 0] = 0
+
+
+class PagedInferencePlane(InferencePlane):
+    """Slot pool backed by a shared paged KV-cache (block pool + tables).
+
+    The pool holds ``1 + pool_blocks`` physical blocks per layer (block 0 is
+    the null block retired lanes write into), padded up to a data-axis
+    multiple so the blocks axis shards.  The host keeps the int32 block
+    tables ``[slots, max_blocks]`` and uploads them as a decode argument —
+    tiny, and it keeps the one-pull-per-step invariant intact.  Block
+    allocation is up-front at prefill: ``blocks_for(min(prompt + budget,
+    max_len))`` per request, so decode never allocates and admission failure
+    is a clean ``Backpressure`` from ``BlockPool.alloc``.
+    """
+
+    def __init__(self, params, cfg: LMConfig, serve: ServeConfig, *,
+                 mesh: Mesh | None = None, seed: int = 0):
+        from repro.launch import sharding as shd
+        from repro.launch.mesh import dp_size
+
+        if serve.block_size is None or serve.block_size < 1:
+            raise ValueError(f"paged plane needs block_size >= 1, "
+                             f"got {serve.block_size}")
+        self.cfg = cfg
+        self.serve = serve
+        param_sh, lane_sh, rep, hints = self._common_setup(params, cfg, serve,
+                                                           mesh, seed)
+
+        b, s = serve.slots, serve.max_len
+        bs = serve.block_size
+        self.block_size = bs
+        #: table width: logical blocks per lane at max_len
+        self.max_blocks = -(-s // bs)
+        usable = serve.pool_capacity()
+        self.pool = BlockPool(usable, bs)
+        # device pool: + null block, padded to a dp multiple for sharding
+        dp_n = dp_size(self.mesh)
+        n_dev = -(-(1 + usable) // dp_n) * dp_n
+        self._mask = lm.paged_cache_mask(cfg)
+        cache_shape = jax.eval_shape(
+            lambda: lm.init_paged_cache(cfg, b, s, num_blocks=n_dev, block_size=bs))
+        cache_sh = shd.paged_cache_shardings(cache_shape, cfg, self.mesh, self._mask)
+        self.cache = jax.device_put(
+            lm.init_paged_cache(cfg, b, s, num_blocks=n_dev, block_size=bs),
+            cache_sh)
+        #: host block tables; row of a retired lane is all-null
+        self.tables = np.zeros((b, self.max_blocks), np.int32)
+        self._blocks: list[list[int]] = [[] for _ in range(b)]
+
+        self._decode = jax.jit(
+            lambda p, tok, cache, lengths, tables: lm.decode_step(
+                p, cfg, tok, cache, lengths, shardings=hints,
+                paged=(tables, bs)),
+            in_shardings=(param_sh, lane_sh, cache_sh, lane_sh, rep),
+            out_shardings=(lane_sh, cache_sh),
+            donate_argnums=(2,))
+
+        def prefill_fn(p, tokens):
+            sub = lm.init_cache(cfg, tokens.shape[0], s)
+            logits, sub, _ = lm.prefill(p, cfg, tokens, sub, shardings=hints)
+            return logits, sub
+
+        self._prefill = jax.jit(prefill_fn, in_shardings=(param_sh, rep))
+
+        def scatter_fn(cache, sub, slots, phys):
+            return lm.scatter_cache_paged(cache, sub, slots, phys,
+                                          block_size=bs, mask=self._mask)
+
+        self._scatter = jax.jit(scatter_fn,
+                                in_shardings=(cache_sh, None, None, None),
+                                out_shardings=cache_sh, donate_argnums=(0,))
+
+    # ------------------------------------------------------------- accounting
+    def block_cost(self, prompt_len: int, budget: int) -> int:
+        """Blocks a request occupies for its lifetime (allocated up front)."""
+        return self.pool.blocks_for(min(prompt_len + budget, self.serve.max_len))
+
+    def free_blocks(self) -> int:
+        return self.pool.available
+
+    # ------------------------------------------------------------------ lanes
+    def prefill_into(self, slots: list[int], prompts: np.ndarray,
+                     budgets: list[int] | None = None) -> np.ndarray:
+        """Paged batched prefill: allocate each lane's lifetime blocks, land
+        the prompt blocks through the tables, record first tokens.
+
+        Raises ``Backpressure`` (after rolling back the group's partial
+        allocations) if the pool cannot cover the group — the Router's block
+        accounting makes this unreachable in the engine path, but direct
+        callers get the clean failure instead of corrupted tables.
+        """
+        assert prompts.ndim == 2 and prompts.shape[0] == len(slots)
+        k, plen = prompts.shape
+        if budgets is None:
+            budgets = [self.serve.max_new_tokens] * k
+        got: list[list[int]] = []
+        try:
+            for budget in budgets:
+                got.append(self.pool.alloc(self.block_cost(plen, budget)))
+        except Exception:
+            for blocks in got:
+                self.pool.free(blocks)
+            raise
+        nbp = self.pool.blocks_for(plen)  # blocks the prompt itself covers
+        for slot, blocks in zip(slots, got):
+            self._blocks[slot] = blocks
+            self.tables[slot, :] = 0
+            self.tables[slot, :len(blocks)] = blocks
+        phys = np.stack([self.tables[slot, :nbp] for slot in slots])
+
+        logits, sub = self._prefill(self.params, jnp.asarray(prompts, jnp.int32))
+        toks = common.device_get(self._sample(logits))
+        self.cache = self._scatter(self.cache, sub,
+                                   np.asarray(slots, np.int32), phys)
+        for i, slot in enumerate(slots):
+            self.lengths[slot] = plen
+            self.tokens[slot, 0] = toks[i]
+        return toks
+
+    def decode(self) -> np.ndarray:
+        """One batched decode step through the block tables.  Same
+        single-pull contract as the contiguous plane."""
+        logits, self.cache = self._decode(self.params, self.tokens,
+                                          self.cache, self.lengths,
+                                          self.tables)
+        return common.device_get(self._sample(logits))
+
+    def release(self, slot: int) -> None:
+        """Retire a lane: free its blocks back to the pool and null its
+        table row, so the lane's masked decode writes land in block 0."""
+        super().release(slot)
+        if self._blocks[slot]:
+            self.pool.free(self._blocks[slot])
+            self._blocks[slot] = []
+        self.tables[slot, :] = 0

@@ -97,25 +97,50 @@ class Router:
         return req.deadline is not None and self.clock() >= req.deadline
 
     # ------------------------------------------------------------- scheduling
-    def pop_group(self, max_requests: int, token_budget: int) -> list[ServeRequest]:
+    def pop_group(self, max_requests: int, token_budget: int, *,
+                  block_budget: int | None = None,
+                  block_cost=None) -> list[ServeRequest]:
         """Pop a batch of SAME-prompt-length requests for one batched prefill.
 
         Takes the oldest queued request's prompt length as the group key and
         collects up to ``max_requests`` queued requests of that length whose
-        summed prompt tokens stay within ``token_budget`` (the group's
-        leader always ships, even alone — a budget smaller than one prompt
-        must not deadlock).  Other lengths stay queued for the next group.
+        summed prompt tokens stay within ``token_budget``.  Other lengths
+        stay queued for the next group (the scan skips past them, so one
+        odd-length head never starves a same-length run behind it).
+
+        The token budget is a THROUGHPUT knob, so the group's leader always
+        ships even alone — a budget smaller than one prompt must not
+        deadlock.  Block accounting is different: when ``block_budget`` /
+        ``block_cost`` are given (paged planes; ``block_cost(req)`` = the
+        target plane's lifetime block count for ``req``), blocks are a HARD
+        resource and the group's summed cost must fit the budget.  A leader
+        that does not fit returns an EMPTY group — it stays queued (FIFO:
+        head-of-line waits rather than being overtaken) until retirements
+        free blocks; never-fitting requests are rejected at submit, so this
+        cannot deadlock.
+
+        Popped requests flip to status "active".  Grouping never changes
+        outputs: greedy decode is per-lane, so the batch composition only
+        affects WHEN a request runs (the fleet bit-identity test pins this).
         """
         if not self.queue or max_requests <= 0:
             return []
         plen = self.queue[0].prompt.size
         group: list[ServeRequest] = []
         tokens = 0
+        blocks = 0
         for r in list(self.queue):
             if r.prompt.size != plen:
                 continue
             if group and tokens + plen > token_budget:
                 break
+            if block_budget is not None:
+                cost = block_cost(r)
+                if blocks + cost > block_budget:
+                    if not group:
+                        return []  # head-of-line waits for block frees
+                    break
+                blocks += cost
             group.append(r)
             tokens += plen
             if len(group) >= max_requests:

@@ -37,6 +37,23 @@ class ServeConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0  # 0 = greedy
     eos_id: int | None = None
+    #: paged KV: tokens per cache block (None = contiguous per-slot lines).
+    #: The reference Server ignores it — it stays the contiguous anchor.
+    block_size: int | None = None
+    #: usable blocks in the shared pool; None = slots * ceil(max_len /
+    #: block_size), i.e. contiguous capacity at block granularity.  Size it
+    #: to the EXPECTED live tokens (prompt+budget per request x slots) to
+    #: realise the memory win; admission accounts blocks and backpressures
+    #: cleanly when the pool is exhausted.
+    pool_blocks: int | None = None
+
+    def pool_capacity(self) -> int:
+        """Usable blocks in the paged pool (0 when not paged)."""
+        if self.block_size is None:
+            return 0
+        if self.pool_blocks is not None:
+            return self.pool_blocks
+        return self.slots * (-(-self.max_len // self.block_size))
 
 
 def validate_request(serve: ServeConfig, prompt: np.ndarray,

@@ -299,6 +299,40 @@ def _run_announcer(args: argparse.Namespace) -> None:
         time.sleep(0.1)
 
 
+# ============================================================== serve worker
+def _run_serve_worker(args: argparse.Namespace) -> None:
+    """One serving host (PR 9): a single-plane ``ServeWorker`` pumping file
+    mailboxes, announcing liveness through the shared heartbeat dir.  The
+    driver-side ``FleetEngine`` assigns work, detects this process's death
+    via beat silence, and re-prefills its in-flight requests on survivors.
+
+    Every incarnation gets an attempt-suffixed spool (``w{rank}_a{attempt}``)
+    so a relaunch never re-reads the ghost's half-consumed mailbox; params
+    come from the same seeded init on every host, so the fleet is weight-
+    identical by construction (a real deployment would load a checkpoint)."""
+    import jax
+
+    from repro.configs import LM_ARCHS
+    from repro.distributed.transport import FileHeartbeatTransport
+    from repro.models.lm import model as lm
+    from repro.serve import FileMailbox, ServeConfig, ServeWorker
+
+    cfg = LM_ARCHS["qwen1.5-4b"].smoke_config()
+    params = lm.init(jax.random.PRNGKey(1), cfg)
+    sc = ServeConfig(slots=args.slots, max_len=args.max_len,
+                     max_new_tokens=args.max_new,
+                     block_size=args.block_size or None,
+                     pool_blocks=args.pool_blocks or None)
+    spool = os.path.join(args.out, f"w{args.rank}_a{args.attempt}")
+    worker = ServeWorker(
+        params, cfg, sc, worker_id=args.rank, attempt=args.attempt,
+        inbox=FileMailbox(os.path.join(spool, "in")),
+        outbox=FileMailbox(os.path.join(spool, "out")),
+        heartbeat=FileHeartbeatTransport(os.path.join(args.out, "hb")))
+    worker.run(step_delay=args.step_delay)
+    os._exit(0)  # clean stop: the coordinator told us to
+
+
 # =================================================================== driver
 def _wait(proc, *, timeout: float, what: str) -> int:
     try:
@@ -715,10 +749,127 @@ def test_two_process_feed_assembly_matches_single_host(tmp_path, free_port,
                    "val_mae_per_epoch": ref_evals}, f, indent=1)
 
 
+def test_serve_fleet_kill_plane_drill(tmp_path, mh_spawn, results_dir):
+    """PR 9 elastic-serving drill on REAL processes: two paged serving
+    workers behind a driver-side ``FleetEngine`` over file mailboxes + the
+    file heartbeat transport.  Worker 1 is SIGKILLed mid-decode with
+    requests in flight; the coordinator attributes the death by beat
+    silence, re-prefills the victim's requests on the survivor from
+    prompt + generated prefix, and the whole wave stays bit-identical to
+    the in-process reference ``Server``.  A fresh incarnation of worker 1
+    then re-joins (bumped attempt, new spool) and serves a second wave —
+    also bit-identical.  Evidence merges under ``serve_fleet``."""
+    import jax
+    import numpy as np
+
+    from repro.configs import LM_ARCHS
+    from repro.distributed.transport import FileHeartbeatTransport
+    from repro.models.lm import model as lm
+    from repro.serve import FileMailbox, FleetEngine, ServeConfig, Server
+
+    run = str(tmp_path / "serve")
+    os.makedirs(run)
+    SLOTS, MAX_LEN, BUDGET, BS = 2, 48, 12, 4
+    sc = ServeConfig(slots=SLOTS, max_len=MAX_LEN, max_new_tokens=BUDGET,
+                     block_size=BS)
+    cfg = LM_ARCHS["qwen1.5-4b"].smoke_config()
+    params = lm.init(jax.random.PRNGKey(1), cfg)  # == every worker's init
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, 120, size=int(rng.integers(2, 10)))
+               for _ in range(8)]
+
+    # in-process contiguous reference: the bit-identity anchor
+    srv = Server(params, cfg, ServeConfig(slots=SLOTS, max_len=MAX_LEN,
+                                          max_new_tokens=BUDGET))
+    for p in prompts:
+        srv.submit(p)
+    ref = srv.run()
+
+    hb = FileHeartbeatTransport(os.path.join(run, "hb"))
+    fleet = FleetEngine(sc, world=2, hb_timeout=HB_TIMEOUT,
+                        step_feed=lambda: hb.step_feed(0, 2))
+
+    def attach_and_spawn(wid: int, attempt: int):
+        spool = os.path.join(run, f"w{wid}_a{attempt}")
+        fleet.attach(wid, attempt=attempt,
+                     send=FileMailbox(os.path.join(spool, "in")),
+                     recv=FileMailbox(os.path.join(spool, "out")))
+        return mh_spawn(
+            ["serve-worker", "--out", run, "--rank", wid,
+             "--attempt", attempt, "--slots", SLOTS, "--max-len", MAX_LEN,
+             "--max-new", BUDGET, "--block-size", BS,
+             "--step-delay", 0.05],
+            devices=1, log=os.path.join(run, f"w{wid}_a{attempt}.log"))
+
+    procs = {wid: attach_and_spawn(wid, 0) for wid in range(2)}
+
+    # wait out jax import/compile before racing the heartbeat timeout
+    deadline = time.time() + 240
+    while _hb_step(run, 0) < 0 or _hb_step(run, 1) < 0:
+        assert time.time() < deadline, "serve workers never came up"
+        time.sleep(0.1)
+
+    # ---- wave 1: kill worker 1 the moment it has partial output in flight
+    rids = [fleet.submit(p) for p in prompts]
+    killed_with: list[int] = []
+    while fleet.pending():
+        fleet.tick()
+        if not killed_with:
+            infl = fleet.workers[1].inflight
+            partial = [len(r.out) for r, _ in infl.values()
+                       if 0 < len(r.out) < r.budget]
+            if partial:
+                procs[1].kill()  # SIGKILL mid-decode: beats stop dead
+                procs[1].wait()
+                killed_with = partial
+        assert time.time() < deadline, "wave 1 never drained"
+        time.sleep(0.05)
+    assert killed_with, "kill window missed: worker 1 never held partial work"
+    res = fleet.results()
+    wave1_ok = all(res[rid] == ref[i] for i, rid in enumerate(rids))
+    assert wave1_ok, "wave 1 diverged from the reference after the kill"
+    survivor_served = fleet.workers[0].served
+    assert fleet.workers[1].served + survivor_served == len(prompts)
+
+    # ---- rejoin: fresh incarnation of worker 1 (attempt 1, fresh spool);
+    #      its resumed beats flip the tracker live again before wave 2
+    procs[1] = attach_and_spawn(1, 1)
+    while 1 not in set(fleet.tracker.live()):
+        assert time.time() < deadline, "worker 1 never re-joined"
+        fleet.tick()
+        time.sleep(0.1)
+
+    rids2 = [fleet.submit(p) for p in prompts]
+    while fleet.pending():
+        fleet.tick()
+        assert time.time() < deadline, "wave 2 never drained"
+        time.sleep(0.05)
+    res2 = fleet.results()
+    wave2_ok = all(res2[rid] == ref[i] for i, rid in enumerate(rids2))
+    assert wave2_ok, "wave 2 diverged after the rejoin"
+    rejoined_served = fleet.workers[1].served
+    assert rejoined_served > 0, "returned worker was never assigned work"
+
+    fleet.stop_workers()
+    assert _wait(procs[0], timeout=60, what="serve worker 0 stop") == 0
+    assert _wait(procs[1], timeout=60, what="serve worker 1 stop") == 0
+
+    _merge_evidence(results_dir, {"serve_fleet": {
+        "workers": 2, "slots_per_worker": SLOTS, "block_size": BS,
+        "requests_per_wave": len(prompts), "budget": BUDGET,
+        "killed_worker": 1, "partial_tokens_at_kill": killed_with,
+        "survivor_served_wave1": survivor_served,
+        "rejoined_served_wave2": rejoined_served,
+        "wave1_bit_identical": wave1_ok,
+        "wave2_bit_identical": wave2_ok,
+    }})
+
+
 # ====================================================================== main
 def _main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("role", choices=["worker", "announce", "coordinator"])
+    ap.add_argument("role", choices=["worker", "announce", "coordinator",
+                                     "serve-worker"])
     ap.add_argument("--phase", default="run")
     ap.add_argument("--out", required=True)
     ap.add_argument("--rank", type=int, default=0)
@@ -747,11 +898,25 @@ def _main() -> None:
                     help="the PJRT coordination service is hosted by the "
                          "driver's coordinator subprocess, not process 0 "
                          "(required for a survivable rank-0 death)")
+    # serve-worker knobs (PR 9 elastic-serving drill)
+    ap.add_argument("--attempt", type=int, default=0,
+                    help="mailbox incarnation of this serve worker; the "
+                         "coordinator bumps it on every relaunch so a "
+                         "returned host never re-reads its ghost's spool")
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-len", type=int, default=48)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="paged-KV block size (0 = contiguous lanes)")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="usable paged-pool blocks (0 = contiguous capacity)")
     args = ap.parse_args()
     if args.role == "announce":
         _run_announcer(args)
     elif args.role == "coordinator":
         _run_coordinator(args)
+    elif args.role == "serve-worker":
+        _run_serve_worker(args)
     else:
         _run_worker(args)
 

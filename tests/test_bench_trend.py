@@ -38,6 +38,10 @@ SBASE = {
     "serve_p50_ms": 6.7,
     "serve_p99_ms": 9.5,
     "serve_tokens_s": 350.0,
+    # PR 9 paged-KV arm: resident pool bytes (lower) and requests admitted
+    # inside the contiguous byte budget (higher), both ratio-gated.
+    "serve_cache_bytes": 73728.0,
+    "serve_admitted_at_saturation": 16.0,
 }
 
 

@@ -1,0 +1,118 @@
+"""BlockPool property tests (PR 9 satellite): the paged-KV allocator.
+
+The allocator's contract is what keeps paged decoding safe:
+- alloc/free round-trip: every freed block is reusable, capacity is conserved;
+- no double-assignment: a block is owned by at most one request at any time
+  under arbitrary alloc/free churn (two lanes writing one physical block
+  would silently corrupt each other's KV);
+- exhaustion is ``Backpressure`` (admission-level, retryable) — NOT an OOM
+  or a silent partial allocation;
+- block 0 is the NULL block and is never handed out (dead decode lanes write
+  through all-zero table rows into block 0 by construction);
+- the block-table gather reassembles exactly the contiguous token line for
+  EVERY block size, dividing ``max_len`` or not — the indexing identity the
+  paged attention path stands on.
+
+Runs under real hypothesis when installed, else the seeded-example fallback
+from conftest.py.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve import Backpressure, BlockPool, NULL_BLOCK
+
+
+def test_null_block_reserved():
+    pool = BlockPool(4, 8)
+    got = pool.alloc(4)
+    assert NULL_BLOCK not in got
+    assert sorted(got) == [1, 2, 3, 4]
+
+
+def test_blocks_for_ceil_division():
+    pool = BlockPool(8, 4)
+    assert [pool.blocks_for(t) for t in (1, 3, 4, 5, 8, 9)] == [1, 1, 1, 2, 2, 3]
+
+
+def test_exhaustion_is_backpressure_and_atomic():
+    """Over-ask raises Backpressure and allocates NOTHING (no partial grab
+    that would leak blocks on the admission-retry path)."""
+    pool = BlockPool(4, 8)
+    pool.alloc(2)
+    with pytest.raises(Backpressure):
+        pool.alloc(3)
+    assert pool.available == 2  # untouched by the failed alloc
+    pool.alloc(2)  # the remaining blocks are still allocatable
+    assert pool.available == 0
+
+
+def test_double_free_rejected():
+    pool = BlockPool(4, 8)
+    blocks = pool.alloc(2)
+    pool.free(blocks)
+    with pytest.raises(ValueError):
+        pool.free(blocks)
+    with pytest.raises(ValueError):
+        pool.free([NULL_BLOCK])  # the null block is never owned
+
+
+@settings(max_examples=60, deadline=None)
+@given(num_blocks=st.integers(1, 24), block_size=st.integers(1, 16),
+       seed=st.integers(0, 2**16))
+def test_churn_never_double_assigns(num_blocks, block_size, seed):
+    """Random alloc/free churn: live requests never share a block, freed
+    blocks return, and available-count always equals capacity minus live."""
+    rng = np.random.default_rng(seed)
+    pool = BlockPool(num_blocks, block_size)
+    live: list[list[int]] = []
+    for _ in range(60):
+        if live and rng.random() < 0.45:
+            blocks = live.pop(int(rng.integers(0, len(live))))
+            pool.free(blocks)
+        else:
+            want = int(rng.integers(1, num_blocks + 1))
+            try:
+                live.append(pool.alloc(want))
+            except Backpressure:
+                assert want > pool.available  # only raised when it must be
+        held = [b for blocks in live for b in blocks]
+        assert len(held) == len(set(held)), "block double-assigned"
+        assert NULL_BLOCK not in held
+        assert pool.available == num_blocks - len(held)
+    for blocks in live:
+        pool.free(blocks)
+    assert pool.available == num_blocks  # full round-trip
+
+
+@settings(max_examples=60, deadline=None)
+@given(block_size=st.integers(1, 12), max_len=st.integers(4, 48),
+       batch=st.integers(1, 4), seed=st.integers(0, 2**16))
+def test_block_table_gather_matches_contiguous(block_size, max_len, batch,
+                                               seed):
+    """pool[table].reshape(b, -1)[:, :len] == the contiguous line, for every
+    block size — including sizes that do NOT divide max_len (the tail block
+    is partially filled; the gather view over-reads it, the length mask in
+    the attention kernel is what ignores the stale tail)."""
+    rng = np.random.default_rng(seed)
+    max_blocks = -(-max_len // block_size)
+    pool = BlockPool(batch * max_blocks, block_size)
+    store = np.zeros((1 + pool.num_blocks, block_size), np.int64)
+    tables = np.zeros((batch, max_blocks), np.int32)
+    lines, lens = [], []
+    for lane in range(batch):
+        n = int(rng.integers(1, max_len + 1))
+        line = rng.integers(1, 10**6, size=n)
+        blocks = pool.alloc(pool.blocks_for(n))
+        tables[lane, :len(blocks)] = blocks
+        padded = np.zeros((len(blocks) * block_size,), np.int64)
+        padded[:n] = line
+        store[blocks] = padded.reshape(len(blocks), block_size)
+        lines.append(line)
+        lens.append(n)
+    gathered = store[tables].reshape(batch, -1)
+    for lane in range(batch):
+        np.testing.assert_array_equal(gathered[lane, :lens[lane]],
+                                      lines[lane])
+    assert np.all(store[NULL_BLOCK] == 0)  # null block never written

@@ -293,3 +293,122 @@ def test_sharded_pool_on_8_device_mesh(lm_setup):
     leaf = jax.tree.leaves(eng.planes[0].cache)[0]
     assert len(leaf.sharding.device_set) > 1
     assert len({s.device for s in leaf.addressable_shards}) > 1
+
+
+# ---------------------------------------------------------------- paged KV
+def _reference(params, cfg, sc, prompts):
+    srv = Server(params, cfg, sc)
+    for p in prompts:
+        srv.submit(p)
+    return srv.run()
+
+
+@pytest.mark.parametrize("block_size", [4, 5, 16])
+@pytest.mark.parametrize("planes", [1, 2])
+def test_paged_engine_bit_identical_to_server(lm_setup, block_size, planes):
+    """Paged pool (incl. a block size that does NOT divide max_len) must
+    generate EXACTLY what the contiguous reference server generates: the
+    length mask zeroes the stale block tail, so gathering whole blocks can
+    never change a logit."""
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=2, max_len=48, max_new_tokens=5, eos_id=7)
+    rng = np.random.default_rng(3)
+    prompts = _prompts(7, rng)
+    ref = _reference(params, cfg, sc, prompts)
+
+    eng = ServeEngine(params, cfg,
+                      ServeConfig(slots=2, max_len=48, max_new_tokens=5,
+                                  eos_id=7, block_size=block_size),
+                      planes=planes)
+    rids = [eng.submit(p) for p in prompts]
+    got = eng.run()
+    for i, rid in enumerate(rids):
+        assert got[rid] == ref[i], f"request {i} diverged (bs={block_size})"
+
+
+def test_paged_small_pool_bit_identical_and_smaller(lm_setup):
+    """The memory claim: a pool sized to LIVE tokens (not slots x max_len)
+    serves the same workload bit-identically with a measurably smaller
+    resident KV cache than the contiguous plane."""
+    from repro.serve import InferencePlane, PagedInferencePlane
+
+    cfg, params = lm_setup
+    base = dict(slots=4, max_len=48, max_new_tokens=6)
+    sc = ServeConfig(**base, block_size=4, pool_blocks=16)  # 16*4=64 << 4*48
+    rng = np.random.default_rng(11)
+    prompts = _prompts(8, rng)
+    ref = _reference(params, cfg, ServeConfig(**base), prompts)
+
+    eng = ServeEngine(params, cfg, sc)
+    rids = [eng.submit(p) for p in prompts]
+    got = eng.run()
+    for i, rid in enumerate(rids):
+        assert got[rid] == ref[i]
+
+    paged = eng.planes[0].cache_bytes()
+    contiguous = InferencePlane(params, cfg, ServeConfig(**base)).cache_bytes()
+    assert paged < contiguous, (paged, contiguous)
+    assert isinstance(eng.planes[0], PagedInferencePlane)
+
+
+def test_paged_never_fits_rejected_at_submit(lm_setup):
+    """A request whose lifetime block need exceeds the whole pool can never
+    run: ValueError at submit (waiting would deadlock the queue head)."""
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=2, max_len=48, max_new_tokens=20,
+                     block_size=4, pool_blocks=3)
+    eng = ServeEngine(params, cfg, sc)
+    with pytest.raises(ValueError, match="blocks"):
+        eng.submit(np.arange(1, 9, dtype=np.int32))  # needs ceil(28/4)=7 > 3
+
+
+def test_paged_pool_backpressure_defers_not_drops(lm_setup):
+    """A pool with room for ~one request at a time still completes every
+    admitted request: the router's block budget defers admission (head of
+    line WAITS for retirements) — nothing is dropped, nothing OOMs."""
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=4, max_len=48, max_new_tokens=6,
+                     block_size=4, pool_blocks=4)
+    rng = np.random.default_rng(7)
+    prompts = _prompts(5, rng, lo=2, hi=8)  # each needs <= 4 blocks
+    ref = _reference(params, cfg,
+                     ServeConfig(slots=4, max_len=48, max_new_tokens=6),
+                     prompts)
+    eng = ServeEngine(params, cfg, sc)
+    rids = [eng.submit(p) for p in prompts]
+    got = eng.run()
+    for i, rid in enumerate(rids):
+        assert got[rid] == ref[i]
+    assert eng.planes[0].pool.available == 4  # all blocks returned
+
+
+def test_paged_one_pull_per_decode_step(lm_setup):
+    """The paged plane keeps the sync discipline: block tables are uploaded
+    (host→device, free) but the step still costs ONE device→host pull."""
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=4, max_len=48, max_new_tokens=8, block_size=8)
+    eng = ServeEngine(params, cfg, sc)
+    for _ in range(4):
+        eng.submit(np.array([3, 1, 4, 1, 5], np.int32))
+    with count_transfers() as c:
+        eng.step()  # 1 batched prefill + 1 decode
+    assert c["pulls"] == 2
+    with count_transfers() as c:
+        eng.step()
+    assert c["pulls"] == 1
+
+
+def test_router_block_budget_caps_group():
+    """pop_group with a block budget: the group's summed cost must fit; a
+    leader that doesn't fit yields an EMPTY group and stays queued."""
+    sc = ServeConfig(slots=8, max_len=64, max_new_tokens=4)
+    r = Router(sc, queue_limit=None)
+    for _ in range(3):
+        r.submit(np.arange(1, 6, dtype=np.int32))  # plen 5, lifetime 9
+    cost = lambda req: 3  # 3 blocks each
+    g = r.pop_group(8, token_budget=64, block_budget=7, block_cost=cost)
+    assert len(g) == 2  # third would need 9 > 7
+    g2 = r.pop_group(8, token_budget=64, block_budget=2, block_cost=cost)
+    assert g2 == [] and len(r.queue) == 1  # head-of-line waits, stays queued
+    g3 = r.pop_group(8, token_budget=64, block_budget=3, block_cost=cost)
+    assert len(g3) == 1 and not r.queue

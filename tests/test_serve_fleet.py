@@ -1,0 +1,251 @@
+"""Elastic serving fleet (PR 9 tentpole): workers, coordinator, kill/rejoin.
+
+In-process pins of the fleet contracts (the multihost harness proves the
+same drill across real processes — ``tests/multihost.py``):
+
+- mailbox spools deliver in order exactly once (both flavours);
+- a 2-worker fleet's greedy output is bit-identical to the reference
+  ``Server`` — distribution changes WHERE a request runs, never what it
+  generates;
+- kill drill: a dead worker's in-flight requests are re-prefilled on the
+  survivor from prompt + generated prefix, outputs still bit-identical
+  (greedy argmax continuation is exact);
+- rejoin: a returned incarnation (bumped ``attempt``) is assigned new work;
+  messages from the dead incarnation are dropped (no double-finish);
+- coordinator mirrors block accounting: a never-fitting request is rejected
+  at fleet submit; deadlines cancel in-flight work on the worker.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import LM_ARCHS
+from repro.models.lm import model as lm
+from repro.serve import (FileMailbox, FleetEngine, LocalMailbox, ServeConfig,
+                         ServeWorker, Server)
+
+import jax
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = LM_ARCHS["qwen1.5-4b"].smoke_config()
+    params = lm.init(jax.random.PRNGKey(1), cfg)
+    return cfg, params
+
+
+def _prompts(n, rng, lo=2, hi=10):
+    return [rng.integers(0, 120, size=int(rng.integers(lo, hi))) for _ in range(n)]
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _build_fleet(params, cfg, sc, *, world=2, clock=None):
+    fleet = FleetEngine(sc, world=world, hb_timeout=1.5,
+                        clock=clock or _Clock())
+    workers = {}
+    for wid in range(world):
+        inbox, outbox = LocalMailbox(), LocalMailbox()
+        workers[wid] = ServeWorker(params, cfg, sc, worker_id=wid,
+                                   inbox=inbox, outbox=outbox)
+        fleet.attach(wid, send=inbox, recv=outbox)
+    return fleet, workers
+
+
+def _drive(fleet, workers, clock, *, skip=(), limit=600):
+    """Tick coordinator + workers with fresh beats until the fleet drains."""
+    n = 0
+    while fleet.pending() or n == 0:
+        fleet.tracker.observe({w.worker_id: n for w in workers.values()
+                               if w.worker_id not in skip})
+        fleet.tick()
+        for w in workers.values():
+            if w.worker_id not in skip:
+                w.tick()
+        clock.t += 0.01
+        n += 1
+        assert n < limit, "fleet made no progress"
+    return fleet.results()
+
+
+# ------------------------------------------------------------------ mailboxes
+def test_local_mailbox_fifo_exactly_once():
+    mb = LocalMailbox()
+    for i in range(3):
+        mb.send({"i": i})
+    assert [m["i"] for m in mb.recv()] == [0, 1, 2]
+    assert mb.recv() == []  # drained
+
+
+def test_file_mailbox_ordered_and_gap_proof(tmp_path):
+    mb = FileMailbox(str(tmp_path / "spool"))
+    for i in range(5):
+        mb.send({"i": i})
+    reader = FileMailbox(str(tmp_path / "spool"))
+    assert [m["i"] for m in reader.recv()] == [0, 1, 2, 3, 4]
+    assert reader.recv() == []
+    # a fresh writer over an existing spool continues the sequence
+    mb2 = FileMailbox(str(tmp_path / "spool"))
+    mb2.send({"i": 5})
+    assert [m["i"] for m in reader.recv()] == [5]
+
+
+def test_file_mailbox_reader_stops_at_gap(tmp_path):
+    """A missing sequence number (message mid-write) delays delivery, never
+    reorders: the reader stops at the gap and resumes once it fills."""
+    import os
+    d = str(tmp_path / "spool")
+    mb = FileMailbox(d)
+    mb.send({"i": 0})
+    mb.send({"i": 1})
+    os.rename(os.path.join(d, "m_00000001.json"),
+              os.path.join(d, "hidden"))
+    reader = FileMailbox(d)
+    assert reader.recv() == []  # message 1 missing: nothing delivered yet
+    os.rename(os.path.join(d, "hidden"),
+              os.path.join(d, "m_00000001.json"))
+    assert [m["i"] for m in reader.recv()] == [0, 1]
+
+
+# ------------------------------------------------------------ fleet identity
+def test_fleet_bit_identical_to_server(lm_setup):
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=2, max_len=48, max_new_tokens=6, eos_id=7)
+    rng = np.random.default_rng(0)
+    prompts = _prompts(6, rng)
+    srv = Server(params, cfg, sc)
+    for p in prompts:
+        srv.submit(p)
+    ref = srv.run()
+
+    clock = _Clock()
+    fleet, workers = _build_fleet(params, cfg, sc, clock=clock)
+    rids = [fleet.submit(p) for p in prompts]
+    res = _drive(fleet, workers, clock)
+    for i, rid in enumerate(rids):
+        assert res[rid] == ref[i], f"request {i} diverged"
+    # both workers actually served (the point of a fleet)
+    assert all(w.served > 0 for w in fleet.workers.values())
+
+
+def test_fleet_kill_restores_on_survivor_bit_identical(lm_setup):
+    """THE elasticity contract: kill a worker mid-decode; its in-flight
+    requests re-prefill on the survivor from prompt + generated prefix and
+    every output stays bit-identical to the reference server."""
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=2, max_len=48, max_new_tokens=8, block_size=4)
+    rng = np.random.default_rng(0)
+    prompts = _prompts(6, rng)
+    srv = Server(params, cfg, ServeConfig(slots=2, max_len=48,
+                                          max_new_tokens=8))
+    for p in prompts:
+        srv.submit(p)
+    ref = srv.run()
+
+    clock = _Clock()
+    fleet, workers = _build_fleet(params, cfg, sc, clock=clock)
+    rids = [fleet.submit(p) for p in prompts]
+
+    n, killed, saw_partial = 0, False, False
+    while fleet.pending() or n == 0:
+        beats = {0: n} if killed else {0: n, 1: n}
+        fleet.tracker.observe(beats)
+        fleet.tick()
+        for wid, w in workers.items():
+            if not (killed and wid == 1):
+                w.tick()
+        if not killed and n == 3:
+            # kill mid-decode: worker 1 holds in-flight work with a partial
+            # generated prefix (the restore path must CONTINUE, not restart)
+            infl = fleet.workers[1].inflight
+            saw_partial = any(0 < len(r.out) < r.budget
+                              for r, _ in infl.values())
+            assert infl, "worker 1 had nothing in flight at the kill point"
+            killed = True
+            clock.t += 2.0  # silence > hb_timeout: tracker flips it dead
+        clock.t += 0.01
+        n += 1
+        assert n < 800, "fleet made no progress after the kill"
+
+    assert saw_partial, "kill point missed the mid-decode window"
+    res = fleet.results()
+    for i, rid in enumerate(rids):
+        assert res[rid] == ref[i], f"request {i} diverged after the kill"
+    assert fleet.workers[1].served == 0  # everything landed on the survivor
+    assert fleet.workers[0].served == len(prompts)
+
+
+def test_fleet_rejoin_and_stale_incarnation_dropped(lm_setup):
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=2, max_len=48, max_new_tokens=4)
+    rng = np.random.default_rng(2)
+    prompts = _prompts(4, rng)
+    srv = Server(params, cfg, sc)
+    for p in prompts:
+        srv.submit(p)
+    ref = srv.run()
+
+    clock = _Clock()
+    fleet, workers = _build_fleet(params, cfg, sc, clock=clock)
+    # kill worker 1 before it ever beats, drain the first wave on worker 0
+    clock.t += 2.0
+    fleet.tracker.observe({0: 0})
+    rids = [fleet.submit(p) for p in prompts[:2]]
+    res = _drive(fleet, workers, clock, skip=(1,))
+    assert [res[r] for r in rids] == [ref[0], ref[1]]
+
+    # the dead incarnation's ghost: a stale-attempt report must be dropped
+    ghost_out = fleet.workers[1].recv
+    ghost_out.send({"kind": "report", "attempt": 0, "step": 99,
+                    "toks": {str(rids[0]): [123]}, "done": {}})
+
+    # rejoin: fresh incarnation, bumped attempt, fresh beats -> live again
+    inbox, outbox = LocalMailbox(), LocalMailbox()
+    fleet.attach(1, send=inbox, recv=outbox)
+    assert fleet.workers[1].attempt == 1
+    workers[1] = ServeWorker(params, cfg, sc, worker_id=1, inbox=inbox,
+                             outbox=outbox, attempt=1)
+    before = dict(fleet.results())
+    rids2 = [fleet.submit(p) for p in prompts[2:]]
+    res2 = _drive(fleet, workers, clock)
+    assert [res2[r] for r in rids2] == [ref[2], ref[3]]
+    assert fleet.workers[1].served > 0, "returned worker got no work"
+    # the ghost report changed nothing
+    assert {r: res2[r] for r in rids} == {r: before[r] for r in rids}
+
+
+# ----------------------------------------------------------------- admission
+def test_fleet_paged_never_fits_rejected(lm_setup):
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=2, max_len=48, max_new_tokens=20,
+                     block_size=4, pool_blocks=3)
+    fleet = FleetEngine(sc, world=1, clock=_Clock())
+    with pytest.raises(ValueError, match="blocks"):
+        fleet.submit(np.arange(1, 9, dtype=np.int32))
+
+
+def test_fleet_deadline_cancels_inflight(lm_setup):
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=1, max_len=48, max_new_tokens=30)
+    clock = _Clock()
+    fleet, workers = _build_fleet(params, cfg, sc, world=1, clock=clock)
+    rid = fleet.submit(np.array([3, 1, 4], np.int32), deadline_s=0.5)
+    for n in range(4):  # assign + a few decode steps
+        fleet.tracker.observe({0: n})
+        fleet.tick()
+        workers[0].tick()
+        clock.t += 0.01
+    clock.t = 1.0  # past the deadline while ACTIVE on the worker
+    fleet.tracker.observe({0: 9})
+    fleet.tick()  # coordinator times it out + sends cancel
+    req = fleet.router.done[rid]
+    assert req.status == "timeout" and 0 < len(req.out) < 30
+    for _ in range(3):  # worker processes the cancel and frees the lane
+        workers[0].tick()
+    assert len(workers[0].engine.planes[0].free_slots()) == 1
+    assert fleet.pending() == 0

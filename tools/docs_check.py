@@ -1,0 +1,170 @@
+"""Docs checker: keep README/docs commands and links from rotting.
+
+Two failure modes this tool turns into CI failures (PR 9 satellite):
+
+1. **Dead intra-repo links/paths.**  Every markdown link whose target is not
+   an external URL or a pure anchor must resolve to a real file/directory,
+   relative to the linking file (falling back to the repo root).  Renaming
+   ``docs/ARCHITECTURE.md`` or a module without updating its references
+   breaks this check, not a future reader.
+
+2. **Rotten command/code blocks.**  Fenced ``python`` blocks must at least
+   COMPILE (a snippet referencing syntax that never existed is worse than no
+   snippet).  Fenced ``bash`` blocks are syntax-checked with ``bash -n``;
+   blocks annotated with an HTML comment **directly above the fence**::
+
+       <!-- docs-check: run -->
+       ```bash
+       PYTHONPATH=src python -m repro.launch.serve --requests 2 ...
+       ```
+
+   are additionally EXECUTED under ``--run`` (the CI docs-check job) with
+   the repo root as cwd — so the exact commands the README advertises are
+   the commands that work.  ``<!-- docs-check: skip -->`` exempts a block
+   from all checking (deliberately schematic pseudo-code).
+
+Usage:
+    python tools/docs_check.py              # links + compile/syntax checks
+    python tools/docs_check.py --run        # also execute annotated blocks
+    python tools/docs_check.py README.md docs/FOO.md   # explicit file set
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: [text](target) — target captured up to the closing paren (no nesting in
+#: our docs); images (![...]) match too, which is what we want
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_FENCE = re.compile(r"^(```+)\s*(\w*)\s*$")
+_ANNOT = re.compile(r"<!--\s*docs-check:\s*(run|skip)\s*-->")
+
+
+def _default_files() -> list[str]:
+    files = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        for root, _dirs, names in os.walk(docs):
+            files += [os.path.join(root, n) for n in sorted(names)
+                      if n.endswith(".md")]
+    return [f for f in files if os.path.isfile(f)]
+
+
+def _is_external(target: str) -> bool:
+    return target.startswith(("http://", "https://", "mailto:", "#"))
+
+
+def check_links(path: str, text: str) -> list[str]:
+    """Every intra-repo link target must exist (anchors stripped)."""
+    errors = []
+    base = os.path.dirname(path)
+    for m in _LINK.finditer(text):
+        target = m.group(1).split("#")[0]
+        if not target or _is_external(m.group(1)):
+            continue
+        cand = [os.path.normpath(os.path.join(base, target)),
+                os.path.normpath(os.path.join(REPO, target))]
+        if not any(os.path.exists(c) for c in cand):
+            errors.append(f"{os.path.relpath(path, REPO)}: broken link "
+                          f"-> {target}")
+    return errors
+
+
+def extract_blocks(text: str) -> list[dict]:
+    """Fenced code blocks with language + the docs-check annotation (an HTML
+    comment on the non-empty line directly above the fence)."""
+    blocks = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if not (m and m.group(2)):  # opening fence with a language tag
+            i += 1
+            continue
+        fence, lang = m.group(1), m.group(2).lower()
+        annot = None
+        for j in range(i - 1, -1, -1):
+            if not lines[j].strip():
+                continue
+            am = _ANNOT.search(lines[j])
+            annot = am.group(1) if am else None
+            break
+        body, i = [], i + 1
+        while i < len(lines) and not lines[i].startswith(fence):
+            body.append(lines[i])
+            i += 1
+        i += 1  # closing fence
+        blocks.append({"lang": lang, "code": "\n".join(body),
+                       "annot": annot, "line": i - len(body)})
+    return blocks
+
+
+def check_blocks(path: str, text: str, *, run: bool) -> list[str]:
+    errors = []
+    rel = os.path.relpath(path, REPO)
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    for b in extract_blocks(text):
+        where = f"{rel}:{b['line']}"
+        if b["annot"] == "skip":
+            continue
+        if b["lang"] in ("python", "py"):
+            try:
+                compile(b["code"], where, "exec")
+            except SyntaxError as e:
+                errors.append(f"{where}: python block does not compile: {e}")
+        elif b["lang"] in ("bash", "sh", "shell"):
+            p = subprocess.run(["bash", "-n"], input=b["code"],
+                               capture_output=True, text=True)
+            if p.returncode != 0:
+                errors.append(f"{where}: bash block does not parse: "
+                              f"{p.stderr.strip()}")
+            elif run and b["annot"] == "run":
+                p = subprocess.run(["bash", "-e"], input=b["code"],
+                                   capture_output=True, text=True,
+                                   cwd=REPO, env=env, timeout=900)
+                if p.returncode != 0:
+                    tail = (p.stderr or p.stdout).strip().splitlines()[-8:]
+                    errors.append(f"{where}: annotated bash block FAILED "
+                                  f"(exit {p.returncode}):\n    "
+                                  + "\n    ".join(tail))
+                else:
+                    print(f"  ran {where}: ok")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="*",
+                    help="markdown files (default: README.md + docs/**.md)")
+    ap.add_argument("--run", action="store_true",
+                    help="execute bash blocks annotated "
+                         "'<!-- docs-check: run -->' (the CI docs-check job)")
+    args = ap.parse_args(argv)
+    files = ([os.path.abspath(f) for f in args.files] if args.files
+             else _default_files())
+    errors: list[str] = []
+    for path in files:
+        with open(path) as f:
+            text = f.read()
+        errors += check_links(path, text)
+        errors += check_blocks(path, text, run=args.run)
+        print(f"checked {os.path.relpath(path, REPO)}")
+    if errors:
+        print(f"\n{len(errors)} docs problem(s):", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print(f"docs OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
