@@ -8,6 +8,9 @@ fleet is judged on:
 - ``serve_p50_ms`` / ``serve_p99_ms`` — request latency (admission→finish,
   INCLUDING queueing; that is what a client sees) over the Poisson trace,
 - ``serve_tokens_s`` — generated-token throughput over the Poisson replay,
+- ``serve_sampled_tokens_s`` — sampled-decode (temperature > 0) throughput;
+  the same arm ASSERTS request-keyed determinism (same per-request seeds →
+  identical tokens from 1-plane, 2-plane and paged engines) on every run,
 - slot occupancy and backpressure rejects per trace (rows only — occupancy
   is a utilization diagnostic, not a regression gate).
 
@@ -133,6 +136,8 @@ def _suite(*, smoke: bool, arch: str, rate: float, seed: int) -> dict:
     stats["paged"] = _paged_arm(params, cfg, arch=arch, slots=slots,
                                 budget=budget, rate=rate, rng=rng,
                                 contiguous_bytes=engine.planes[0].cache_bytes())
+    stats["sampled"] = _sampled_arm(params, cfg, arch=arch, budget=budget,
+                                    rng=rng)
     stats["config"] = {"arch": arch, "slots": slots, "max_len": 64,
                        "max_new_tokens": budget, "requests": n, "rate": rate,
                        "burst": burst, "queue_limit": 4 * slots,
@@ -205,6 +210,56 @@ def _paged_arm(params, cfg, *, arch: str, slots: int, budget: int,
     }
 
 
+def _sampled_arm(params, cfg, *, arch: str, budget: int, rng) -> dict:
+    """The PR 10 sampled-decode arm: temperature > 0 with request-keyed
+    draws.  Every run REPLAYS the same request set (same per-request seeds)
+    through a 1-plane engine, a 2-plane engine and a paged engine and
+    asserts the outputs are identical — the determinism contract
+    (same seeds → same tokens, independent of plane count and cache layout)
+    fails the bench, and therefore the CI job, the moment it breaks.
+    ``serve_sampled_tokens_s`` (batch replay on the 1-plane engine, sampling
+    inside the jit) is the trend-gated throughput headline.
+    """
+    slots, temp, n = 2, 0.8, 6
+    serve = ServeConfig(slots=slots, max_len=64, max_new_tokens=budget)
+    paged = ServeConfig(slots=slots, max_len=64, max_new_tokens=budget,
+                        block_size=8)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.choice(PLENS)))
+               for _ in range(n)]
+    seeds = [1000 + i for i in range(n)]
+
+    outs: dict[str, list] = {}
+    tokens_s = None
+    for name, planes, sc in (("planes1", 1, serve), ("planes2", 2, serve),
+                             ("paged", 1, paged)):
+        eng = ServeEngine(params, cfg, sc, planes=planes, queue_limit=4 * n)
+        _warmup(eng, slots)  # greedy warmup covers sampled: one shared jit
+        t0 = time.perf_counter()
+        rids = [eng.submit(p, max_new_tokens=budget, temperature=temp,
+                           seed=seeds[i]) for i, p in enumerate(prompts)]
+        res = eng.run()
+        wall = time.perf_counter() - t0
+        outs[name] = [res[r] for r in rids]
+        if name == "planes1":
+            tokens_s = round(sum(len(o) for o in outs[name]) / wall, 1)
+    if not (outs["planes1"] == outs["planes2"] == outs["paged"]):
+        raise RuntimeError(
+            "sampled-decode determinism violated: same per-request seeds "
+            f"produced different tokens across engine shapes — "
+            f"planes1={outs['planes1']} planes2={outs['planes2']} "
+            f"paged={outs['paged']}")
+    detail = f"{arch} slots={slots} temp={temp} n={n}"
+    row("serve/sampled_tokens_s", tokens_s, "tok/s", detail)
+    row("serve/sampled_deterministic", 1, "bool",
+        "1-plane == 2-plane == paged for the same per-request seeds")
+    return {
+        "temperature": temp, "requests": n, "slots": slots,
+        "per_request_seeds": seeds,
+        "tokens_s": tokens_s,
+        "deterministic_across_planes": True,
+    }
+
+
 def main(*, smoke: bool = False, out: str | None = None,
          arch: str = "qwen1.5-4b", rate: float = 30.0, seed: int = 0) -> None:
     t0 = time.perf_counter()
@@ -241,6 +296,10 @@ def main(*, smoke: bool = False, out: str | None = None,
             "serve_cache_bytes": stats["paged"]["cache_bytes"],
             "serve_admitted_at_saturation":
                 stats["paged"]["admitted_at_saturation"],
+            # sampled decode (PR 10): request-keyed draws inside the jit;
+            # the arm raises (failing the job) unless 1-plane == 2-plane ==
+            # paged for the same per-request seeds
+            "serve_sampled_tokens_s": stats["sampled"]["tokens_s"],
         },
         "traces": stats,
         "rows": records,

@@ -65,6 +65,11 @@ HEADLINE_FIELDS: dict[str, tuple[str, str]] = {
     # arithmetic at fixed config, so any drift is a real change.
     "serve_cache_bytes": ("lower", "ratio"),
     "serve_admitted_at_saturation": ("higher", "ratio"),
+    # Request-keyed sampling (PR 10): sampled-decode throughput — the keyed
+    # draws run inside the jitted decode/prefill programs, so a slowdown
+    # here means the sampler path grew a sync or lost program sharing.  The
+    # determinism assertion itself lives in the bench (it raises).
+    "serve_sampled_tokens_s": ("higher", "ratio"),
     # bench-kernels (BENCH_kernels.json) headline: what the auto dispatcher
     # actually runs per op, jitted steady state.
     "gather_slice_us": ("lower", "ratio"),

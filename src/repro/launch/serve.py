@@ -47,9 +47,14 @@ from repro.serve import (Backpressure, FileMailbox, FleetEngine, ServeConfig,
 
 
 def _serve_config(args: argparse.Namespace) -> ServeConfig:
+    # 0 is the argv-safe "off" sentinel for the filters (workers are
+    # re-spawned with string argv, so None can't ride through)
     return ServeConfig(slots=args.slots, max_len=args.max_len,
                        max_new_tokens=args.max_new_tokens,
                        temperature=args.temperature,
+                       sample_seed=args.sample_seed,
+                       top_k=args.top_k or None,
+                       top_p=args.top_p or None,
                        block_size=args.block_size or None,
                        pool_blocks=args.pool_blocks or None)
 
@@ -62,10 +67,12 @@ def _prompts(args: argparse.Namespace, vocab: int) -> list:
 
 def _report(done: dict, out: dict, wall: float, rejects: int, extra: str) -> None:
     ok = [r for r in done.values() if r.status == "ok"]
-    timed_out = len(done) - len(ok)
-    toks = sum(len(r.out) for r in ok)
+    timed_out = sum(1 for r in done.values() if r.status == "timeout")
+    truncated = sum(1 for r in done.values() if r.status == "truncated")
+    toks = sum(len(r.out) for r in done.values() if r.status != "timeout")
     print(f"served {len(ok)}/{len(done)} requests "
-          f"({timed_out} timeout, {rejects} backpressure-shed), "
+          f"({timed_out} timeout, {truncated} truncated, "
+          f"{rejects} backpressure-shed), "
           f"{toks} tokens in {wall:.2f}s ({toks / wall:.1f} tok/s, {extra})")
     for rid in sorted(out):
         tag = "" if done[rid].status == "ok" else f" [{done[rid].status}]"
@@ -163,6 +170,9 @@ def _run_fleet(args: argparse.Namespace) -> None:
                 "--max-len", str(args.max_len),
                 "--max-new-tokens", str(args.max_new_tokens),
                 "--temperature", str(args.temperature),
+                "--sample-seed", str(args.sample_seed),
+                "--top-k", str(args.top_k),
+                "--top-p", str(args.top_p),
                 "--block-size", str(args.block_size),
                 "--pool-blocks", str(args.pool_blocks),
                 "--seed", str(args.seed)]
@@ -207,7 +217,17 @@ def main() -> None:
                          "fleet: worker PROCESSES, one plane each)")
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="default sampling temperature (0 = greedy); draws "
+                         "are request-keyed, so output is identical across "
+                         "--planes counts for the same seeds")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="default per-request base sampling seed")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k largest logits before sampling "
+                         "(0 = off)")
+    ap.add_argument("--top-p", type=float, default=0.0,
+                    help="nucleus sampling mass in (0, 1] (0 = off)")
     ap.add_argument("--block-size", type=int, default=0,
                     help="paged-KV block size in tokens (0 = contiguous "
                          "per-slot cache lines)")

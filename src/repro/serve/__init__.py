@@ -9,8 +9,12 @@
   ``max_len × slots``; pool exhaustion backpressures instead of OOM-ing.
 - ``Router`` — bounded admission (``Backpressure``), deadlines, prompt-length
   grouping for batched prefill, block-budget accounting for paged pools.
-- ``ServeEngine`` — Router + plane fleet; greedy output pinned bit-identical
-  to ``Server``.
+- ``SampleParams``/``keyed_sample`` — request-keyed sampling: every draw is
+  ``fold_in(fold_in(key(seed), rid), position)``, a pure function of the
+  request, so temperature > 0 output is independent of plane/slot/batch
+  placement and survives re-prefill bit-exactly.
+- ``ServeEngine`` — Router + plane fleet; output pinned bit-identical to
+  ``Server`` at any temperature.
 - ``ServeWorker``/``FleetEngine`` — elastic fleet: per-host worker processes
   announcing through heartbeat transports; the coordinator re-prefills a dead
   worker's in-flight requests on survivors and re-admits returning hosts.
@@ -20,11 +24,14 @@ from repro.serve.common import count_transfers, device_get
 from repro.serve.engine import ServeEngine
 from repro.serve.fleet import FileMailbox, FleetEngine, LocalMailbox, ServeWorker
 from repro.serve.plane import InferencePlane, PagedInferencePlane
-from repro.serve.router import Backpressure, Router, ServeRequest
+from repro.serve.router import (Backpressure, Router, ServeRequest,
+                                TERMINAL_STATUSES)
+from repro.serve.sampling import SampleParams, keyed_sample
 from repro.serve.server import ServeConfig, Server, validate_request
 
 __all__ = ["Backpressure", "BlockPool", "FileMailbox", "FleetEngine",
            "InferencePlane", "LocalMailbox", "NULL_BLOCK",
-           "PagedInferencePlane", "Router", "ServeConfig", "ServeEngine",
-           "ServeRequest", "ServeWorker", "Server", "count_transfers",
-           "device_get", "validate_request"]
+           "PagedInferencePlane", "Router", "SampleParams", "ServeConfig",
+           "ServeEngine", "ServeRequest", "ServeWorker", "Server",
+           "TERMINAL_STATUSES", "count_transfers", "device_get",
+           "keyed_sample", "validate_request"]

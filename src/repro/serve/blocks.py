@@ -68,8 +68,17 @@ class BlockPool:
         return blocks
 
     def free(self, blocks: list[int]) -> None:
-        """Return blocks to the pool.  Double-free and foreign ids raise —
-        a block on the free list twice would be handed to two requests."""
+        """Return blocks to the pool.  Double-free, foreign ids and
+        duplicates WITHIN one call raise ``ValueError`` with the pool
+        unchanged (atomic failure) — a block on the free list twice would be
+        handed to two requests, and a half-applied free used to leave the
+        pool in a state no caller could reason about (duplicates passed the
+        membership pre-check, then ``KeyError``-ed mid-loop)."""
+        if len(set(blocks)) != len(blocks):
+            dupes = sorted({b for b in blocks if blocks.count(b) > 1})
+            raise ValueError(
+                f"duplicate block ids in one free call: {dupes} — the pool "
+                f"is unchanged")
         for b in blocks:
             if b not in self._owned:
                 raise ValueError(f"free of unallocated block {b}")

@@ -9,10 +9,12 @@ step loop that moves requests between them:
              lanes (least-loaded plane first) → one batched decode step per
              plane with live lanes → retire budget/EOS/full/deadline lanes.
 
-Greedy output is bit-identical to the single-host ``repro.serve.Server``
-(itself pinned to hand-rolled decode): decoding is per-lane, so neither the
-prefill grouping, the plane assignment, nor the pool's sharding may change
-what any request generates — the fleet-equivalence test enforces this.
+Output is bit-identical to the single-host ``repro.serve.Server`` (itself
+pinned to hand-rolled decode) at ANY temperature: decode and the
+request-keyed draws (``repro.serve.sampling``) are per-lane pure functions
+of each request, so neither the prefill grouping, the plane assignment, nor
+the pool's sharding may change what any request generates — the
+fleet-equivalence tests enforce this for greedy and sampled traffic alike.
 """
 from __future__ import annotations
 
@@ -61,13 +63,19 @@ class ServeEngine:
 
     # ------------------------------------------------------------------ queue
     def submit(self, prompt_tokens, *, max_new_tokens: int | None = None,
-               deadline_s: float | None = None) -> int:
+               deadline_s: float | None = None, seed: int | None = None,
+               temperature: float | None = None, top_k: int | None = None,
+               top_p: float | None = None, rid: int | None = None) -> int:
         """Admit a request (raises ``Backpressure`` / ``ValueError``).
 
-        Paged pools add one admission rule: a request whose lifetime block
-        cost exceeds the POOL's capacity can never run and is rejected with
-        ``ValueError`` here (a full-but-draining pool is ``Backpressure``
-        territory and handled by the router's block accounting instead).
+        ``seed``/``temperature``/``top_k``/``top_p`` override the config's
+        sampling defaults for this request; ``rid`` pins the request id (the
+        fleet worker passes the COORDINATOR's rid so keyed draws survive
+        re-placement).  Paged pools add one admission rule: a request whose
+        lifetime block cost exceeds the POOL's capacity can never run and is
+        rejected with ``ValueError`` here (a full-but-draining pool is
+        ``Backpressure`` territory and handled by the router's block
+        accounting instead).
         """
         if self.paged:
             prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
@@ -80,7 +88,9 @@ class ServeEngine:
                     f"{plane.pool.num_blocks} — raise pool_blocks or shorten "
                     f"the request")
         return self.router.submit(prompt_tokens, max_new_tokens=max_new_tokens,
-                                  deadline_s=deadline_s)
+                                  deadline_s=deadline_s, seed=seed,
+                                  temperature=temperature, top_k=top_k,
+                                  top_p=top_p, rid=rid)
 
     # ------------------------------------------------------------ bookkeeping
     def _retire(self, pi: int, slot: int, req: ServeRequest, *,
@@ -132,7 +142,9 @@ class ServeEngine:
                 slots = plane.free_slots()[:len(group)]
                 prompts = np.stack([r.prompt for r in group])
                 toks = plane.prefill_into(slots, prompts,
-                                          budgets=[r.budget for r in group])
+                                          budgets=[r.budget for r in group],
+                                          rids=[r.rid for r in group],
+                                          samples=[r.sample for r in group])
                 for req, slot, tok in zip(group, slots, toks):
                     req.out.append(int(tok))
                     if self._should_retire(req, int(tok)):
@@ -158,8 +170,13 @@ class ServeEngine:
                 plane.advance(slot, tok)
                 req.out.append(tok)
                 full = plane.lengths[slot] >= self.serve.max_len - 1
-                if self._should_retire(req, tok) or full:
+                if self._should_retire(req, tok):
                     self._retire(pi, slot, req)
+                elif full:
+                    # cache filled before the budget was spent: the caller
+                    # must see the difference — "ok" here read as a complete
+                    # generation when it was cut off by capacity
+                    self._retire(pi, slot, req, status="truncated")
         return self.active_lanes() + len(self.router.queue)
 
     def run(self) -> dict[int, list[int]]:

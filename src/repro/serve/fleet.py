@@ -18,10 +18,12 @@ reuses the PR 5 ``LeaderTracker`` as its liveness oracle:
   mirror is exact), assignment of queued requests to live workers, and the
   RESTORE path: when the tracker times a worker out, its in-flight requests
   are re-queued at the front and re-prefilled on survivors from
-  ``prompt + generated prefix`` with the remaining budget.  For greedy
-  decode this is EXACT — argmax continuation depends only on the token
-  prefix, not on which host produced it or whether it came from a prefill
-  or a decode step.  A returning host re-attaches with a fresh mailbox
+  ``prompt + generated prefix`` with the remaining budget.  This is EXACT
+  at ANY temperature — greedy continuation depends only on the token
+  prefix, and sampled draws are request-keyed by absolute position
+  (``repro.serve.sampling``): the survivor's prefill draw at position
+  ``plen + g`` re-derives the very key the dead host would have used for
+  its next decode step.  A returning host re-attaches with a fresh mailbox
   incarnation (``attempt``); its resumed beats make the tracker report it
   live again and the coordinator assigns to it like any survivor.
 
@@ -50,7 +52,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.serve.router import Router, ServeRequest
+from repro.serve.router import Router, ServeRequest, TERMINAL_STATUSES
 from repro.serve.server import ServeConfig, validate_request
 
 
@@ -152,8 +154,17 @@ class ServeWorker:
                 self.stopped = True
             elif kind == "assign" and msg.get("attempt") == self.attempt:
                 for r in msg["reqs"]:
+                    # the assignment pins the COORDINATOR's rid and sampling
+                    # contract: keyed draws depend on (seed, rid, position)
+                    # only, so a restore onto this worker re-derives the dead
+                    # incarnation's exact stream
                     self.engine.submit(np.asarray(r["prompt"], np.int32),
-                                       max_new_tokens=r["budget"])
+                                       max_new_tokens=r["budget"],
+                                       rid=int(r["rid"]),
+                                       seed=int(r["seed"]),
+                                       temperature=float(r["temperature"]),
+                                       top_k=int(r["top_k"]),
+                                       top_p=float(r["top_p"]))
                     req = self.engine.router.queue[-1]
                     self._reqs[int(r["rid"])] = req
                     self._reported[int(r["rid"])] = 0
@@ -176,7 +187,7 @@ class ServeWorker:
             if len(req.out) > n:
                 toks[str(rid)] = [int(t) for t in req.out[n:]]
                 self._reported[rid] = len(req.out)
-            if req.status in ("ok", "timeout") and rid not in self._done_sent:
+            if req.status in TERMINAL_STATUSES and rid not in self._done_sent:
                 done[str(rid)] = req.status
                 self._done_sent.add(rid)
         # tokens and completions ship in ONE message: a crash between "sent
@@ -286,8 +297,11 @@ class FleetEngine:
         return -(-min(total_tokens, self.serve.max_len) // self._block_size)
 
     def submit(self, prompt_tokens, *, max_new_tokens: int | None = None,
-               deadline_s: float | None = None) -> int:
-        """Admit a request (``Backpressure`` / ``ValueError`` as the engine)."""
+               deadline_s: float | None = None, seed: int | None = None,
+               temperature: float | None = None, top_k: int | None = None,
+               top_p: float | None = None) -> int:
+        """Admit a request (``Backpressure`` / ``ValueError`` as the engine).
+        Sampling overrides ride the request through assignment and restore."""
         if self._block_size is not None:
             prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
             budget = validate_request(self.serve, prompt, max_new_tokens)
@@ -298,7 +312,9 @@ class FleetEngine:
                     f"{self._pool_capacity} — raise pool_blocks or shorten "
                     f"the request")
         return self.router.submit(prompt_tokens, max_new_tokens=max_new_tokens,
-                                  deadline_s=deadline_s)
+                                  deadline_s=deadline_s, seed=seed,
+                                  temperature=temperature, top_k=top_k,
+                                  top_p=top_p)
 
     # --------------------------------------------------------------- restore
     def _finalize(self, req: ServeRequest, status: str = "ok") -> None:
@@ -377,6 +393,9 @@ class FleetEngine:
             assigns.setdefault(w.wid, []).append({
                 "rid": req.rid, "prompt": full_prompt,
                 "budget": req.budget - len(req.out), "_cost": cost,
+                "seed": req.sample.seed,
+                "temperature": req.sample.temperature,
+                "top_k": req.sample.top_k, "top_p": req.sample.top_p,
                 "_req": req})
         for wid, entries in assigns.items():
             w = self.workers[wid]

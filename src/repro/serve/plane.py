@@ -30,6 +30,14 @@ Two jitted programs:
   single-host server's per-request init_cache + per-request scatter chain,
   the fill path's main waste.
 
+Sampling happens INSIDE both programs via ``sampling.keyed_sample``:
+per-lane (rid, seed, temperature, top_k, top_p) rows ride as jit arguments
+next to the length row, and each lane's token is drawn with the request-keyed
+``fold_in(fold_in(key(seed), rid), position)`` — a pure function of the
+request, never of plane assignment, slot index, or batch composition.  That
+is what lets N planes (and the fleet's kill→re-prefill restore) stay
+bit-identical to the reference Server at ANY temperature, not just greedy.
+
 One-pull-per-step invariant: decode bookkeeping (lengths, next tokens, block
 tables) is host-resident numpy, uploaded as arguments; the only blocking
 device->host sync per decode step (and per prefill group) is the single
@@ -54,13 +62,19 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.lm import model as lm
 from repro.models.lm.config import LMConfig
-from repro.serve import common
+from repro.serve import common, sampling
 from repro.serve.blocks import BlockPool
 from repro.serve.server import ServeConfig
 
 
 def _div(n: int, k: int) -> bool:
     return k > 0 and n % k == 0
+
+
+def _decode_positions(lengths):
+    """Absolute position of the token each decode step SAMPLES: the input
+    token sits at index ``lengths``, so the draw lands at ``lengths + 1``."""
+    return lengths + jnp.int32(1)
 
 
 class InferencePlane:
@@ -80,21 +94,39 @@ class InferencePlane:
         cache_sh = shd.cache_shardings(cache_shape, cfg, self.mesh)
         self.cache = jax.device_put(lm.init_cache(cfg, b, s), cache_sh)
 
+        def decode_fn(p, tok, cache, lengths, rids, seeds, temps, tks, tps):
+            logits, cache = lm.decode_step(p, cfg, tok, cache, lengths,
+                                           shardings=hints)
+            toks = sampling.keyed_sample(logits, rids, seeds,
+                                         _decode_positions(lengths), temps,
+                                         tks, tps)
+            return toks, cache
+
+        # sampling runs INSIDE the jit with per-lane (rid, seed, temp,
+        # top_k, top_p) rows as traced inputs: greedy and sampled lanes
+        # share ONE compiled program, and the returned row is already the
+        # sampled tokens — still exactly one device→host pull per step
         self._decode = jax.jit(
-            lambda p, tok, cache, lengths: lm.decode_step(
-                p, cfg, tok, cache, lengths, shardings=hints),
-            in_shardings=(param_sh, lane_sh, cache_sh, lane_sh),
+            decode_fn,
+            in_shardings=(param_sh, lane_sh, cache_sh, lane_sh, lane_sh,
+                          lane_sh, lane_sh, lane_sh, lane_sh),
             out_shardings=(lane_sh, cache_sh),
             donate_argnums=(2,))
 
-        def prefill_fn(p, tokens):
+        def prefill_fn(p, tokens, rids, seeds, temps, tks, tps):
             # k-batch cache born INSIDE the jit: zero host alloc/upload
             sub = lm.init_cache(cfg, tokens.shape[0], s)
             logits, sub, _ = lm.prefill(p, cfg, tokens, sub, shardings=hints)
-            return logits, sub
+            positions = jnp.full((tokens.shape[0],), tokens.shape[1],
+                                 jnp.int32)  # prompt occupies 0..plen-1
+            toks = sampling.keyed_sample(logits, rids, seeds, positions,
+                                         temps, tks, tps)
+            return toks, sub
 
         # retraces per (k, plen) bucket; prompts are tiny — ship replicated
-        self._prefill = jax.jit(prefill_fn, in_shardings=(param_sh, rep))
+        self._prefill = jax.jit(prefill_fn,
+                                in_shardings=(param_sh, rep, rep, rep, rep,
+                                              rep, rep))
         self._scatter = jax.jit(lm.scatter_cache,
                                 in_shardings=(cache_sh, None, None),
                                 out_shardings=cache_sh, donate_argnums=(0,))
@@ -107,7 +139,6 @@ class InferencePlane:
         from repro.launch.specs import act_hints
 
         self.mesh = mesh = mesh or make_host_mesh()
-        self._key = jax.random.PRNGKey(seed)
         params_shape = jax.eval_shape(lambda: params)
         param_sh = shd.lm_param_shardings(params_shape, cfg, mesh, fsdp=())
         # device_put dedupes: already-committed shards are reused, so every
@@ -121,18 +152,39 @@ class InferencePlane:
         lane_sh = NamedSharding(mesh, lane_spec)
         rep = NamedSharding(mesh, P())
 
-        # host-resident decode bookkeeping — uploaded as args, never pulled
+        # host-resident decode bookkeeping — uploaded as args, never pulled.
+        # The sampling rows mirror the length row: per-lane (rid, seed,
+        # temperature, top_k, top_p) ride into the jit as arguments, so a
+        # lane's draw is a pure function of ITS request — which plane/slot
+        # it occupies and who shares the batch cannot change the token.
         self.lengths = np.zeros((b,), np.int32)
         self.tokens = np.zeros((b, 1), np.int32)
+        self.rids = np.zeros((b,), np.int32)
+        self.seeds = np.zeros((b,), np.uint32)
+        self.temps = np.zeros((b,), np.float32)
+        self.top_ks = np.full((b,), sampling.TOP_K_OFF, np.int32)
+        self.top_ps = np.full((b,), sampling.TOP_P_OFF, np.float32)
         return param_sh, lane_sh, rep, act_hints(cfg, mesh)
 
     # ---------------------------------------------------------------- sampling
-    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
-        if self.serve.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self._key, k = jax.random.split(self._key)
-        return jax.random.categorical(
-            k, logits / self.serve.temperature).astype(jnp.int32)
+    def _set_sample_rows(self, slots: list[int], rids, samples) -> tuple:
+        """Record each slot's (rid, SampleParams) and return the GROUP row
+        arrays for the prefill jit.  ``rids``/``samples`` default to rid 0 /
+        greedy for direct callers that never leave temperature 0."""
+        k = len(slots)
+        if rids is None:
+            rids = [0] * k
+        if samples is None:
+            samples = [sampling.SampleParams()] * k
+        seeds, temps, tks, tps = sampling.sample_rows(samples, k)
+        grids = np.asarray(rids, np.int32)
+        for i, slot in enumerate(slots):
+            self.rids[slot] = grids[i]
+            self.seeds[slot] = seeds[i]
+            self.temps[slot] = temps[i]
+            self.top_ks[slot] = tks[i]
+            self.top_ps[slot] = tps[i]
+        return grids, seeds, temps, tks, tps
 
     # ------------------------------------------------------------------ lanes
     def free_slots(self) -> list[int]:
@@ -144,18 +196,26 @@ class InferencePlane:
         return sum(leaf.nbytes for leaf in jax.tree.leaves(self.cache))
 
     def prefill_into(self, slots: list[int], prompts: np.ndarray,
-                     budgets: list[int] | None = None) -> np.ndarray:
+                     budgets: list[int] | None = None,
+                     rids: list[int] | None = None,
+                     samples=None) -> np.ndarray:
         """Batched prefill of ``[k, plen]`` prompts into ``slots`` (len k).
 
         ``budgets`` (per-request remaining token budgets) is accepted for
         interface parity with the paged plane, which sizes each lane's block
         allocation from it; the contiguous plane's lanes are pre-sized to
-        ``max_len`` so it is unused here.  Returns the k sampled first tokens
+        ``max_len`` so it is unused here.  ``rids``/``samples`` carry each
+        request's identity and sampling contract into the keyed sampler
+        (defaults: rid 0, greedy).  Returns the k sampled first tokens
         (host).  One device->host pull for the whole group.
         """
         assert prompts.ndim == 2 and prompts.shape[0] == len(slots)
-        logits, sub = self._prefill(self.params, jnp.asarray(prompts, jnp.int32))
-        toks = common.device_get(self._sample(logits))
+        grids, seeds, temps, tks, tps = self._set_sample_rows(slots, rids,
+                                                              samples)
+        toks, sub = self._prefill(self.params,
+                                  jnp.asarray(prompts, jnp.int32),
+                                  grids, seeds, temps, tks, tps)
+        toks = common.device_get(toks)
         self.cache = self._scatter(self.cache, sub,
                                    np.asarray(slots, np.int32))
         for i, slot in enumerate(slots):
@@ -166,9 +226,11 @@ class InferencePlane:
     def decode(self) -> np.ndarray:
         """One batched decode step over the pool.  Returns the sampled token
         row (host, [slots]) — the step's single device→host pull."""
-        logits, self.cache = self._decode(self.params, self.tokens,
-                                          self.cache, self.lengths)
-        return common.device_get(self._sample(logits))
+        toks, self.cache = self._decode(self.params, self.tokens,
+                                        self.cache, self.lengths, self.rids,
+                                        self.seeds, self.temps, self.top_ks,
+                                        self.top_ps)
+        return common.device_get(toks)
 
     def advance(self, slot: int, tok: int) -> None:
         """Commit a decode step's token on a live lane."""
@@ -177,9 +239,16 @@ class InferencePlane:
 
     def release(self, slot: int) -> None:
         """Retire a lane: mask its token/length so later decode steps never
-        touch its stale state (the cache slice is replaced at next prefill)."""
+        touch its stale state (the cache slice is replaced at next prefill).
+        Sampling rows reset to greedy — a dead lane's draw is pure argmax
+        and cannot consume or perturb any request's keyed stream."""
         self.lengths[slot] = 0
         self.tokens[slot, 0] = 0
+        self.rids[slot] = 0
+        self.seeds[slot] = 0
+        self.temps[slot] = 0.0
+        self.top_ks[slot] = sampling.TOP_K_OFF
+        self.top_ps[slot] = sampling.TOP_P_OFF
 
 
 class PagedInferencePlane(InferencePlane):
@@ -229,20 +298,34 @@ class PagedInferencePlane(InferencePlane):
         self.tables = np.zeros((b, self.max_blocks), np.int32)
         self._blocks: list[list[int]] = [[] for _ in range(b)]
 
+        def decode_fn(p, tok, cache, lengths, tables, rids, seeds, temps,
+                      tks, tps):
+            logits, cache = lm.decode_step(p, cfg, tok, cache, lengths,
+                                           shardings=hints, paged=(tables, bs))
+            toks = sampling.keyed_sample(logits, rids, seeds,
+                                         _decode_positions(lengths), temps,
+                                         tks, tps)
+            return toks, cache
+
         self._decode = jax.jit(
-            lambda p, tok, cache, lengths, tables: lm.decode_step(
-                p, cfg, tok, cache, lengths, shardings=hints,
-                paged=(tables, bs)),
-            in_shardings=(param_sh, lane_sh, cache_sh, lane_sh, rep),
+            decode_fn,
+            in_shardings=(param_sh, lane_sh, cache_sh, lane_sh, rep, lane_sh,
+                          lane_sh, lane_sh, lane_sh, lane_sh),
             out_shardings=(lane_sh, cache_sh),
             donate_argnums=(2,))
 
-        def prefill_fn(p, tokens):
+        def prefill_fn(p, tokens, rids, seeds, temps, tks, tps):
             sub = lm.init_cache(cfg, tokens.shape[0], s)
             logits, sub, _ = lm.prefill(p, cfg, tokens, sub, shardings=hints)
-            return logits, sub
+            positions = jnp.full((tokens.shape[0],), tokens.shape[1],
+                                 jnp.int32)
+            toks = sampling.keyed_sample(logits, rids, seeds, positions,
+                                         temps, tks, tps)
+            return toks, sub
 
-        self._prefill = jax.jit(prefill_fn, in_shardings=(param_sh, rep))
+        self._prefill = jax.jit(prefill_fn,
+                                in_shardings=(param_sh, rep, rep, rep, rep,
+                                              rep, rep))
 
         def scatter_fn(cache, sub, slots, phys):
             return lm.scatter_cache_paged(cache, sub, slots, phys,
@@ -262,7 +345,9 @@ class PagedInferencePlane(InferencePlane):
 
     # ------------------------------------------------------------------ lanes
     def prefill_into(self, slots: list[int], prompts: np.ndarray,
-                     budgets: list[int] | None = None) -> np.ndarray:
+                     budgets: list[int] | None = None,
+                     rids: list[int] | None = None,
+                     samples=None) -> np.ndarray:
         """Paged batched prefill: allocate each lane's lifetime blocks, land
         the prompt blocks through the tables, record first tokens.
 
@@ -290,8 +375,12 @@ class PagedInferencePlane(InferencePlane):
             self.tables[slot, :len(blocks)] = blocks
         phys = np.stack([self.tables[slot, :nbp] for slot in slots])
 
-        logits, sub = self._prefill(self.params, jnp.asarray(prompts, jnp.int32))
-        toks = common.device_get(self._sample(logits))
+        grids, seeds, temps, tks, tps = self._set_sample_rows(slots, rids,
+                                                              samples)
+        toks, sub = self._prefill(self.params,
+                                  jnp.asarray(prompts, jnp.int32),
+                                  grids, seeds, temps, tks, tps)
+        toks = common.device_get(toks)
         self.cache = self._scatter(self.cache, sub,
                                    np.asarray(slots, np.int32), phys)
         for i, slot in enumerate(slots):
@@ -302,10 +391,11 @@ class PagedInferencePlane(InferencePlane):
     def decode(self) -> np.ndarray:
         """One batched decode step through the block tables.  Same
         single-pull contract as the contiguous plane."""
-        logits, self.cache = self._decode(self.params, self.tokens,
-                                          self.cache, self.lengths,
-                                          self.tables)
-        return common.device_get(self._sample(logits))
+        toks, self.cache = self._decode(self.params, self.tokens,
+                                        self.cache, self.lengths,
+                                        self.tables, self.rids, self.seeds,
+                                        self.temps, self.top_ks, self.top_ps)
+        return common.device_get(toks)
 
     def release(self, slot: int) -> None:
         """Retire a lane: free its blocks back to the pool and null its

@@ -21,7 +21,12 @@ from typing import Callable
 
 import numpy as np
 
+from repro.serve.sampling import SampleParams
 from repro.serve.server import ServeConfig, validate_request
+
+#: statuses a finished request can carry (``truncated`` = the lane was
+#: retired because the cache filled before the budget was spent)
+TERMINAL_STATUSES = ("ok", "timeout", "truncated")
 
 
 class Backpressure(RuntimeError):
@@ -39,10 +44,20 @@ class ServeRequest:
     submitted_at: float = 0.0
     finished_at: float = 0.0
     out: list[int] = dataclasses.field(default_factory=list)
-    status: str = "queued"  # queued | active | ok | timeout
+    status: str = "queued"  # queued | active | ok | timeout | truncated
+    #: request-keyed sampling contract — rides WITH the request through
+    #: planes, fleet mailboxes and re-prefill, so draws never depend on
+    #: where the request runs
+    sample: SampleParams = dataclasses.field(default_factory=SampleParams)
 
     @property
-    def latency_s(self) -> float:
+    def latency_s(self) -> float | None:
+        """Admission→finish latency.  ``None`` until the request reaches a
+        terminal status — ``finished_at`` is unset before that, and the old
+        ``finished - submitted`` arithmetic went NEGATIVE on in-flight
+        requests (0.0 minus a real clock reading)."""
+        if self.status not in TERMINAL_STATUSES:
+            return None
         return self.finished_at - self.submitted_at
 
 
@@ -64,20 +79,34 @@ class Router:
 
     # -------------------------------------------------------------- admission
     def submit(self, prompt_tokens, *, max_new_tokens: int | None = None,
-               deadline_s: float | None = None) -> int:
+               deadline_s: float | None = None, seed: int | None = None,
+               temperature: float | None = None, top_k: int | None = None,
+               top_p: float | None = None, rid: int | None = None) -> int:
         """Admit a request.  Raises ``Backpressure`` when the queue is full,
-        ``ValueError`` on an invalid budget/prompt (see ``validate_request``)."""
+        ``ValueError`` on an invalid budget/prompt (see ``validate_request``)
+        or invalid sampling overrides (negative temperature, bad top_k/p).
+
+        ``seed``/``temperature``/``top_k``/``top_p`` override the
+        ``ServeConfig`` defaults for THIS request.  ``rid`` pins an explicit
+        request id — the fleet seam: a worker must key its draws with the
+        COORDINATOR'S rid, or re-prefill on a different host would re-derive
+        a different stream."""
         prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
         budget = validate_request(self.serve, prompt, max_new_tokens)
+        sample = SampleParams.resolve(self.serve, seed=seed,
+                                      temperature=temperature, top_k=top_k,
+                                      top_p=top_p)
         if self.queue_limit is not None and len(self.queue) >= self.queue_limit:
             raise Backpressure(
                 f"queue full ({len(self.queue)}/{self.queue_limit} requests); "
                 f"retry or shed load")
         now = self.clock()
-        req = ServeRequest(self._next_rid, prompt, budget,
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        req = ServeRequest(rid, prompt, budget,
                            deadline=None if deadline_s is None else now + deadline_s,
-                           submitted_at=now)
-        self._next_rid += 1
+                           submitted_at=now, sample=sample)
         self.queue.append(req)
         return req.rid
 
@@ -120,9 +149,19 @@ class Router:
         cannot deadlock.
 
         Popped requests flip to status "active".  Grouping never changes
-        outputs: greedy decode is per-lane, so the batch composition only
-        affects WHEN a request runs (the fleet bit-identity test pins this).
+        outputs: decode and the request-keyed draws are per-lane, so the
+        batch composition only affects WHEN a request runs (the fleet
+        bit-identity tests pin this at temperature 0 AND above).
         """
+        if (block_budget is None) != (block_cost is None):
+            # passing one without the other used to surface as a bare
+            # TypeError deep in the accounting loop, after requests had
+            # already been inspected — validate the pairing up front
+            raise ValueError(
+                "pop_group needs block_budget and block_cost together: "
+                f"got block_budget={block_budget!r}, "
+                f"block_cost={'None' if block_cost is None else 'set'} "
+                "(paged planes supply both; contiguous planes neither)")
         if not self.queue or max_requests <= 0:
             return []
         plen = self.queue[0].prompt.size

@@ -1,0 +1,155 @@
+"""Stateless request-keyed sampling: the index-batching principle for PRNGs.
+
+The serving stack used to draw sampled tokens from a mutable per-plane key
+stream (``key, k = split(key)`` per step), which made a request's output at
+``temperature > 0`` depend on which plane it landed on, what else was in
+flight, and even on retired lanes (a whole-row ``categorical`` advances the
+stream for dead slots too).  That violates the repo's one structural rule —
+construct state at runtime from indices instead of storing it — exactly
+where it hurts most: the fleet's kill→re-prefill restore was provably exact
+only for greedy decode.
+
+This module replaces the streams with a **pure function of indices**: the
+token at sequence position ``pos`` of request ``rid`` is drawn with
+
+    key = fold_in(fold_in(PRNGKey(seed), rid), pos)
+
+so a draw depends only on ``(seed, rid, pos, logits)`` — not on plane
+assignment, slot index, batch composition, or any other request.  Positions
+are absolute (the prompt occupies ``0..plen-1``; the first sampled token
+sits at ``pos = plen``), which is what makes re-prefill exact at any
+temperature: a restored request re-prefills from ``prompt + generated
+prefix`` of length ``plen + g``, and its prefill draw at ``pos = plen + g``
+re-derives the very key (and, greedy-identity having pinned the logits, the
+very token) the dead host would have produced next.
+
+``keyed_sample`` is designed to run INSIDE the jitted decode/prefill
+programs: per-lane (rid, seed, temperature, top_k, top_p) rows ride along as
+jit inputs next to the existing length rows, and temperature is a *traced*
+value — greedy and sampled traffic share one compiled program, and a
+``temperature == 0`` lane reproduces the historical ``argmax`` of the raw
+logits bit-exactly (the greedy bit-identity suite keeps holding).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: disabled-filter sentinels (the "off" encodings are real no-op parameter
+#: values, so one compiled program serves filtered and unfiltered lanes)
+TOP_K_OFF = 0
+TOP_P_OFF = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleParams:
+    """Per-request sampling contract, resolved + validated at submit time.
+
+    ``seed`` is the request's base PRNG seed (folded with rid/position at
+    draw time); ``top_k``/``top_p`` filter logits before the draw
+    (``TOP_K_OFF``/``TOP_P_OFF`` disable).  ``temperature == 0`` is greedy
+    regardless of the other fields.
+    """
+
+    seed: int = 0
+    temperature: float = 0.0
+    top_k: int = TOP_K_OFF
+    top_p: float = TOP_P_OFF
+
+    def validate(self) -> "SampleParams":
+        if not math.isfinite(self.temperature) or self.temperature < 0.0:
+            raise ValueError(
+                f"temperature must be finite and >= 0 (0 = greedy), got "
+                f"{self.temperature}")
+        if not 0 <= int(self.seed) < 2 ** 32:
+            raise ValueError(f"seed must fit uint32, got {self.seed}")
+        if self.top_k < 0:
+            raise ValueError(
+                f"top_k must be >= 1 ({TOP_K_OFF} = disabled), got "
+                f"{self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(
+                f"top_p must be in (0, 1] ({TOP_P_OFF} = disabled), got "
+                f"{self.top_p}")
+        return self
+
+    @classmethod
+    def resolve(cls, serve, *, seed=None, temperature=None, top_k=None,
+                top_p=None) -> "SampleParams":
+        """Fill per-request overrides from the ``ServeConfig`` defaults and
+        validate the result (the submit seam's half of the contract)."""
+        return cls(
+            seed=int(serve.sample_seed if seed is None else seed),
+            temperature=float(serve.temperature if temperature is None
+                              else temperature),
+            top_k=int((TOP_K_OFF if serve.top_k is None else serve.top_k)
+                      if top_k is None else top_k),
+            top_p=float((TOP_P_OFF if serve.top_p is None else serve.top_p)
+                        if top_p is None else top_p),
+        ).validate()
+
+
+def sample_rows(samples, dtype_len: int) -> tuple:
+    """Host-side row arrays (seeds, temps, top_ks, top_ps) for ``dtype_len``
+    lanes from a list of ``SampleParams`` (padded with greedy defaults)."""
+    seeds = np.zeros((dtype_len,), np.uint32)
+    temps = np.zeros((dtype_len,), np.float32)
+    tks = np.full((dtype_len,), TOP_K_OFF, np.int32)
+    tps = np.full((dtype_len,), TOP_P_OFF, np.float32)
+    for i, s in enumerate(samples):
+        seeds[i], temps[i], tks[i], tps[i] = s.seed, s.temperature, s.top_k, s.top_p
+    return seeds, temps, tks, tps
+
+
+def request_key(seed, rid, position):
+    """The draw key for token ``position`` of request ``rid``: a pure
+    function of indices — no stream, nothing to restore."""
+    base = jax.random.PRNGKey(jnp.asarray(seed, jnp.uint32))
+    return jax.random.fold_in(jax.random.fold_in(base, rid), position)
+
+
+def _filter_top_k(lg, k):
+    """Mask logits below the k-th largest to -inf.  ``k <= 0`` disables
+    (effective k = vocab).  Ties at the k-th value are kept — the standard
+    caveat, and deterministic either way."""
+    eff = jnp.where(k <= 0, lg.shape[-1], k)
+    kth = jnp.sort(lg)[::-1][eff - 1]
+    return jnp.where(lg >= kth, lg, -jnp.inf)
+
+
+def _filter_top_p(lg, p):
+    """Nucleus filter: keep the smallest descending-probability prefix whose
+    cumulative mass reaches ``p`` (always >= 1 token).  ``p >= 1`` keeps
+    everything — the same code path, no branch."""
+    desc = jnp.sort(lg)[::-1]
+    cum = jnp.cumsum(jax.nn.softmax(desc))
+    keep = jnp.sum(cum < p) + 1  # first index reaching p is inclusive
+    thresh = desc[keep - 1]
+    return jnp.where(lg >= thresh, lg, -jnp.inf)
+
+
+def keyed_sample(logits, rids, seeds, positions, temps, top_ks, top_ps):
+    """Sample one token per lane from ``logits [B, V]`` with request-keyed
+    draws.  All row args are ``[B]``; every output depends only on its own
+    lane's ``(seed, rid, position, logits)``.
+
+    A ``temperature == 0`` lane returns ``argmax`` of the RAW logits —
+    bit-identical to the historical greedy path (filters never touch it).
+    Retired lanes (temperature 0) therefore cost nothing and, unlike the
+    old whole-row categorical, can never advance anyone else's draws.
+    """
+
+    def one(lg, rid, seed, pos, temp, k, p):
+        greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        key = request_key(seed, rid, pos)
+        filt = _filter_top_p(_filter_top_k(lg, k), p)
+        safe_t = jnp.where(temp > 0.0, temp, jnp.float32(1.0))
+        drawn = jax.random.categorical(key, filt / safe_t).astype(jnp.int32)
+        return jnp.where(temp > 0.0, drawn, greedy)
+
+    return jax.vmap(one)(logits, rids, seeds, positions, temps, top_ks,
+                         top_ps)

@@ -27,7 +27,8 @@ import numpy as np
 
 from repro.models.lm import model as lm
 from repro.models.lm.config import LMConfig
-from repro.serve import common
+from repro.serve import common, sampling
+from repro.serve.sampling import SampleParams
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,7 +36,13 @@ class ServeConfig:
     slots: int = 4  # concurrent decode lanes
     max_len: int = 256  # cache capacity per lane
     max_new_tokens: int = 32
+    #: default per-request sampling contract (each submit may override):
+    #: draws are request-keyed — ``fold_in(fold_in(key(seed), rid), pos)``
+    #: — so they never depend on plane/slot/batch placement.
     temperature: float = 0.0  # 0 = greedy
+    sample_seed: int = 0  # default per-request base seed
+    top_k: int | None = None  # keep the k largest logits (None = off)
+    top_p: float | None = None  # nucleus mass cutoff in (0, 1] (None = off)
     eos_id: int | None = None
     #: paged KV: tokens per cache block (None = contiguous per-slot lines).
     #: The reference Server ignores it — it stays the contiguous anchor.
@@ -46,6 +53,17 @@ class ServeConfig:
     #: realise the memory win; admission accounts blocks and backpressures
     #: cleanly when the pool is exhausted.
     pool_blocks: int | None = None
+
+    def __post_init__(self):
+        # a negative temperature used to silently decode greedy; reject it
+        # (and the other sampling knobs) at CONFIG time, before a request
+        # ever rides on the bad default
+        sampling.SampleParams(seed=self.sample_seed,
+                              temperature=self.temperature,
+                              top_k=(sampling.TOP_K_OFF if self.top_k is None
+                                     else self.top_k),
+                              top_p=(sampling.TOP_P_OFF if self.top_p is None
+                                     else self.top_p)).validate()
 
     def pool_capacity(self) -> int:
         """Usable blocks in the paged pool (0 when not paged)."""
@@ -86,10 +104,16 @@ class _Request:
     prompt: np.ndarray
     out: list[int] = dataclasses.field(default_factory=list)
     budget: int = 0
+    sample: SampleParams = dataclasses.field(default_factory=SampleParams)
 
 
 class Server:
-    """Continuous-batching server around prefill/decode_step."""
+    """Continuous-batching server around prefill/decode_step.
+
+    ``seed`` is accepted for API compatibility but no longer feeds
+    sampling: draws are request-keyed (``ServeConfig.sample_seed`` /
+    per-submit ``seed=``), so output never depends on server identity.
+    """
 
     def __init__(self, params, cfg: LMConfig, serve: ServeConfig, *, seed: int = 0):
         self.params = params
@@ -98,28 +122,42 @@ class Server:
         self.queue: deque[_Request] = deque()
         self.done: dict[int, list[int]] = {}
         self._next_rid = 0
-        self._key = jax.random.PRNGKey(seed)
 
         b, s = serve.slots, serve.max_len
         self.cache = lm.init_cache(cfg, b, s)
         # host-resident bookkeeping: uploaded as decode args (cheap, async),
-        # never pulled back per-lane
+        # never pulled back per-lane.  The sampling rows mirror the length
+        # row: per-lane (rid, seed, temperature, top_k, top_p) ship as
+        # sampler arguments, so a draw is a pure function of the lane's own
+        # request — a retired neighbour can never advance anyone's stream.
         self.lengths = np.zeros((b,), np.int32)
         self.tokens = np.zeros((b, 1), np.int32)
         self.active: list[_Request | None] = [None] * b
+        self.rids = np.zeros((b,), np.int32)
+        self.seeds = np.zeros((b,), np.uint32)
+        self.temps = np.zeros((b,), np.float32)
+        self.top_ks = np.full((b,), sampling.TOP_K_OFF, np.int32)
+        self.top_ps = np.full((b,), sampling.TOP_P_OFF, np.float32)
 
         self._decode = jax.jit(
             lambda p, tok, cache, lengths: lm.decode_step(p, cfg, tok, cache, lengths))
         self._prefill1 = jax.jit(
             lambda p, tok, cache: lm.prefill(p, cfg, tok, cache))
+        self._sampler = jax.jit(sampling.keyed_sample)
 
     # ------------------------------------------------------------------ queue
-    def submit(self, prompt_tokens: np.ndarray, *, max_new_tokens: int | None = None) -> int:
+    def submit(self, prompt_tokens: np.ndarray, *,
+               max_new_tokens: int | None = None, seed: int | None = None,
+               temperature: float | None = None, top_k: int | None = None,
+               top_p: float | None = None) -> int:
         prompt = np.asarray(prompt_tokens, np.int32).reshape(-1)
         budget = validate_request(self.serve, prompt, max_new_tokens)
+        sample = SampleParams.resolve(self.serve, seed=seed,
+                                      temperature=temperature, top_k=top_k,
+                                      top_p=top_p)
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(_Request(rid, prompt, budget=budget))
+        self.queue.append(_Request(rid, prompt, budget=budget, sample=sample))
         return rid
 
     def _fill_slot(self, slot: int) -> bool:
@@ -135,7 +173,11 @@ class Server:
             cache1 = lm.init_cache(self.cfg, 1, self.serve.max_len)
             logits, cache1, _ = self._prefill1(
                 self.params, jnp.asarray(req.prompt[None]), cache1)
-            tok = int(common.device_get(self._sample(logits))[0])
+            # the prefill draw sits at absolute position plen (prompt
+            # occupies 0..plen-1) — the start of the request's keyed stream
+            tok = int(common.device_get(self._sample(
+                logits, [req], positions=np.array([req.prompt.size],
+                                                  np.int32)))[0])
             req.out.append(tok)
             hit_eos = self.serve.eos_id is not None and tok == self.serve.eos_id
             if len(req.out) >= req.budget or hit_eos:
@@ -151,14 +193,30 @@ class Server:
             self.lengths[slot] = req.prompt.size  # prefill length, known on host
             self.tokens[slot, 0] = tok
             self.active[slot] = req
+            self.rids[slot] = req.rid
+            self.seeds[slot] = req.sample.seed
+            self.temps[slot] = req.sample.temperature
+            self.top_ks[slot] = req.sample.top_k
+            self.top_ps[slot] = req.sample.top_p
             return True
         return False
 
-    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
-        if self.serve.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self._key, k = jax.random.split(self._key)
-        return jax.random.categorical(k, logits / self.serve.temperature).astype(jnp.int32)
+    def _sample(self, logits: jnp.ndarray, reqs: list[_Request],
+                positions: np.ndarray) -> jnp.ndarray:
+        """Request-keyed draws for an ad-hoc row of requests (prefill)."""
+        seeds, temps, tks, tps = sampling.sample_rows(
+            [r.sample for r in reqs], len(reqs))
+        rids = np.array([r.rid for r in reqs], np.int32)
+        return self._sampler(logits, rids, seeds, positions, temps, tks, tps)
+
+    def _sample_pool(self, logits: jnp.ndarray) -> jnp.ndarray:
+        """Request-keyed draws for the whole slot pool (decode).  Position
+        of the token being sampled = current length + 1 (the decode input
+        token itself sits at index ``lengths``).  Masked lanes carry
+        temperature 0 and are ignored by the caller."""
+        return self._sampler(logits, self.rids, self.seeds,
+                             self.lengths + np.int32(1), self.temps,
+                             self.top_ks, self.top_ps)
 
     # ------------------------------------------------------------------- step
     def step(self) -> int:
@@ -172,7 +230,7 @@ class Server:
         logits, self.cache = self._decode(self.params, self.tokens, self.cache,
                                           self.lengths)
         # the step's ONE device→host sync: the whole sampled token row
-        next_tok = common.device_get(self._sample(logits))
+        next_tok = common.device_get(self._sample_pool(logits))
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
@@ -187,9 +245,16 @@ class Server:
                 self.active[slot] = None
                 # mask the retired lane so later steps never decode its
                 # stale token (its length resets; the cache slice is
-                # overwritten whole at the next prefill)
+                # overwritten whole at the next prefill).  The sampling rows
+                # reset to greedy: a dead lane's draw is pure argmax and
+                # cannot consume or perturb any request's keyed stream.
                 self.lengths[slot] = 0
                 self.tokens[slot, 0] = 0
+                self.rids[slot] = 0
+                self.seeds[slot] = 0
+                self.temps[slot] = 0.0
+                self.top_ks[slot] = sampling.TOP_K_OFF
+                self.top_ps[slot] = sampling.TOP_P_OFF
         return sum(1 for r in self.active if r is not None)
 
     def run(self) -> dict[int, list[int]]:

@@ -750,15 +750,18 @@ def test_two_process_feed_assembly_matches_single_host(tmp_path, free_port,
 
 
 def test_serve_fleet_kill_plane_drill(tmp_path, mh_spawn, results_dir):
-    """PR 9 elastic-serving drill on REAL processes: two paged serving
-    workers behind a driver-side ``FleetEngine`` over file mailboxes + the
-    file heartbeat transport.  Worker 1 is SIGKILLed mid-decode with
-    requests in flight; the coordinator attributes the death by beat
-    silence, re-prefills the victim's requests on the survivor from
-    prompt + generated prefix, and the whole wave stays bit-identical to
-    the in-process reference ``Server``.  A fresh incarnation of worker 1
-    then re-joins (bumped attempt, new spool) and serves a second wave —
-    also bit-identical.  Evidence merges under ``serve_fleet``."""
+    """PR 9/10 elastic-serving drill on REAL processes, at temperature > 0:
+    two paged serving workers behind a driver-side ``FleetEngine`` over file
+    mailboxes + the file heartbeat transport.  Every request decodes SAMPLED
+    (request-keyed draws, per-request seeds).  Worker 1 is SIGKILLed
+    mid-decode with requests in flight; the coordinator attributes the death
+    by beat silence, re-prefills the victim's requests on the survivor from
+    prompt + generated prefix — and because draws are keyed by
+    (seed, rid, absolute position), the continuation is EXACT even while
+    sampling: the whole wave stays bit-identical to the in-process reference
+    ``Server``.  A fresh incarnation of worker 1 then re-joins (bumped
+    attempt, new spool) and serves a second wave — also bit-identical.
+    Evidence merges under ``serve_fleet`` + ``serve_fleet_sampled``."""
     import jax
     import numpy as np
 
@@ -769,7 +772,7 @@ def test_serve_fleet_kill_plane_drill(tmp_path, mh_spawn, results_dir):
 
     run = str(tmp_path / "serve")
     os.makedirs(run)
-    SLOTS, MAX_LEN, BUDGET, BS = 2, 48, 12, 4
+    SLOTS, MAX_LEN, BUDGET, BS, TEMP = 2, 48, 12, 4, 0.7
     sc = ServeConfig(slots=SLOTS, max_len=MAX_LEN, max_new_tokens=BUDGET,
                      block_size=BS)
     cfg = LM_ARCHS["qwen1.5-4b"].smoke_config()
@@ -778,11 +781,15 @@ def test_serve_fleet_kill_plane_drill(tmp_path, mh_spawn, results_dir):
     prompts = [rng.integers(0, 120, size=int(rng.integers(2, 10)))
                for _ in range(8)]
 
-    # in-process contiguous reference: the bit-identity anchor
+    # in-process contiguous reference: the bit-identity anchor.  It serves
+    # the prompt set TWICE so its rids (0..15) line up with the fleet's two
+    # waves — keyed draws fold in the rid, so wave 2's request i (rid 8+i)
+    # must be compared against the reference request with the SAME rid.
     srv = Server(params, cfg, ServeConfig(slots=SLOTS, max_len=MAX_LEN,
                                           max_new_tokens=BUDGET))
-    for p in prompts:
-        srv.submit(p)
+    for _wave in range(2):
+        for i, p in enumerate(prompts):
+            srv.submit(p, temperature=TEMP, seed=100 + i)
     ref = srv.run()
 
     hb = FileHeartbeatTransport(os.path.join(run, "hb"))
@@ -810,7 +817,8 @@ def test_serve_fleet_kill_plane_drill(tmp_path, mh_spawn, results_dir):
         time.sleep(0.1)
 
     # ---- wave 1: kill worker 1 the moment it has partial output in flight
-    rids = [fleet.submit(p) for p in prompts]
+    rids = [fleet.submit(p, temperature=TEMP, seed=100 + i)
+            for i, p in enumerate(prompts)]
     killed_with: list[int] = []
     while fleet.pending():
         fleet.tick()
@@ -826,7 +834,7 @@ def test_serve_fleet_kill_plane_drill(tmp_path, mh_spawn, results_dir):
         time.sleep(0.05)
     assert killed_with, "kill window missed: worker 1 never held partial work"
     res = fleet.results()
-    wave1_ok = all(res[rid] == ref[i] for i, rid in enumerate(rids))
+    wave1_ok = all(res[rid] == ref[rid] for rid in rids)
     assert wave1_ok, "wave 1 diverged from the reference after the kill"
     survivor_served = fleet.workers[0].served
     assert fleet.workers[1].served + survivor_served == len(prompts)
@@ -839,13 +847,14 @@ def test_serve_fleet_kill_plane_drill(tmp_path, mh_spawn, results_dir):
         fleet.tick()
         time.sleep(0.1)
 
-    rids2 = [fleet.submit(p) for p in prompts]
+    rids2 = [fleet.submit(p, temperature=TEMP, seed=100 + i)
+             for i, p in enumerate(prompts)]
     while fleet.pending():
         fleet.tick()
         assert time.time() < deadline, "wave 2 never drained"
         time.sleep(0.05)
     res2 = fleet.results()
-    wave2_ok = all(res2[rid] == ref[i] for i, rid in enumerate(rids2))
+    wave2_ok = all(res2[rid] == ref[rid] for rid in rids2)
     assert wave2_ok, "wave 2 diverged after the rejoin"
     rejoined_served = fleet.workers[1].served
     assert rejoined_served > 0, "returned worker was never assigned work"
@@ -854,15 +863,25 @@ def test_serve_fleet_kill_plane_drill(tmp_path, mh_spawn, results_dir):
     assert _wait(procs[0], timeout=60, what="serve worker 0 stop") == 0
     assert _wait(procs[1], timeout=60, what="serve worker 1 stop") == 0
 
-    _merge_evidence(results_dir, {"serve_fleet": {
-        "workers": 2, "slots_per_worker": SLOTS, "block_size": BS,
-        "requests_per_wave": len(prompts), "budget": BUDGET,
-        "killed_worker": 1, "partial_tokens_at_kill": killed_with,
-        "survivor_served_wave1": survivor_served,
-        "rejoined_served_wave2": rejoined_served,
-        "wave1_bit_identical": wave1_ok,
-        "wave2_bit_identical": wave2_ok,
-    }})
+    _merge_evidence(results_dir, {
+        "serve_fleet": {
+            "workers": 2, "slots_per_worker": SLOTS, "block_size": BS,
+            "requests_per_wave": len(prompts), "budget": BUDGET,
+            "killed_worker": 1, "partial_tokens_at_kill": killed_with,
+            "survivor_served_wave1": survivor_served,
+            "rejoined_served_wave2": rejoined_served,
+            "wave1_bit_identical": wave1_ok,
+            "wave2_bit_identical": wave2_ok,
+        },
+        # PR 10: the SAME drill ran with sampled decoding — the restore
+        # across a SIGKILL is exact at temperature > 0, not just greedy
+        "serve_fleet_sampled": {
+            "temperature": TEMP,
+            "per_request_seeds": [100 + i for i in range(len(prompts))],
+            "wave1_bit_identical_across_kill": wave1_ok,
+            "wave2_bit_identical_after_rejoin": wave2_ok,
+        },
+    })
 
 
 # ====================================================================== main

@@ -42,6 +42,9 @@ SBASE = {
     # inside the contiguous byte budget (higher), both ratio-gated.
     "serve_cache_bytes": 73728.0,
     "serve_admitted_at_saturation": 16.0,
+    # PR 10 sampled-decode arm (determinism is asserted in the bench
+    # itself; the gate only watches throughput).
+    "serve_sampled_tokens_s": 2767.0,
 }
 
 
@@ -148,6 +151,10 @@ def test_serve_fields_direction_aware():
     assert v["serve_tokens_s"] == "fail"
     v = _verdicts(SBASE, dict(SBASE, serve_tokens_s=350.0 * 1.3))
     assert v["serve_tokens_s"] == "ok"
+    v = _verdicts(SBASE, dict(SBASE, serve_sampled_tokens_s=2767.0 * 0.7))
+    assert v["serve_sampled_tokens_s"] == "fail"
+    v = _verdicts(SBASE, dict(SBASE, serve_sampled_tokens_s=2767.0 * 1.3))
+    assert v["serve_sampled_tokens_s"] == "ok"
 
 
 # --------------------------------------------------------------- CLI contract

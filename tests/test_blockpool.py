@@ -58,6 +58,19 @@ def test_double_free_rejected():
         pool.free([NULL_BLOCK])  # the null block is never owned
 
 
+def test_duplicate_ids_in_one_free_atomic():
+    """Regression: ``free([b, b])`` passed the membership pre-check (both
+    occurrences owned), then ``KeyError``-ed mid-loop with the pool HALF
+    freed.  Duplicates must raise ValueError with the pool unchanged."""
+    pool = BlockPool(4, 8)
+    blocks = pool.alloc(3)
+    with pytest.raises(ValueError, match="duplicate"):
+        pool.free([blocks[0], blocks[1], blocks[0]])
+    assert pool.available == 1  # nothing was freed by the failed call
+    pool.free(blocks)  # every block is still owned and freeable once
+    assert pool.available == 4
+
+
 @settings(max_examples=60, deadline=None)
 @given(num_blocks=st.integers(1, 24), block_size=st.integers(1, 16),
        seed=st.integers(0, 2**16))

@@ -180,6 +180,51 @@ def test_fleet_kill_restores_on_survivor_bit_identical(lm_setup):
     assert fleet.workers[0].served == len(prompts)
 
 
+def test_fleet_kill_restores_sampled_bit_identical(lm_setup):
+    """The PR-10 payoff: the same kill→re-prefill drill at temperature > 0.
+    Keyed draws depend only on (seed, rid, position), so the survivor's
+    re-prefill of prompt + g generated tokens samples at position plen + g —
+    re-deriving exactly the draw the dead worker would have made next."""
+    cfg, params = lm_setup
+    sc = ServeConfig(slots=2, max_len=48, max_new_tokens=8)
+    rng = np.random.default_rng(0)
+    prompts = _prompts(6, rng)
+    srv = Server(params, cfg, sc)
+    for i, p in enumerate(prompts):
+        srv.submit(p, temperature=0.8, seed=40 + i)
+    ref = srv.run()
+
+    clock = _Clock()
+    fleet, workers = _build_fleet(params, cfg, sc, clock=clock)
+    rids = [fleet.submit(p, temperature=0.8, seed=40 + i)
+            for i, p in enumerate(prompts)]
+
+    n, killed, saw_partial = 0, False, False
+    while fleet.pending() or n == 0:
+        beats = {0: n} if killed else {0: n, 1: n}
+        fleet.tracker.observe(beats)
+        fleet.tick()
+        for wid, w in workers.items():
+            if not (killed and wid == 1):
+                w.tick()
+        if not killed and n == 3:
+            infl = fleet.workers[1].inflight
+            saw_partial = any(0 < len(r.out) < r.budget
+                              for r, _ in infl.values())
+            assert infl, "worker 1 had nothing in flight at the kill point"
+            killed = True
+            clock.t += 2.0
+        clock.t += 0.01
+        n += 1
+        assert n < 800, "fleet made no progress after the kill"
+
+    assert saw_partial, "kill point missed the mid-decode window"
+    res = fleet.results()
+    for i, rid in enumerate(rids):
+        assert res[rid] == ref[i], \
+            f"sampled request {i} diverged after the kill"
+
+
 def test_fleet_rejoin_and_stale_incarnation_dropped(lm_setup):
     cfg, params = lm_setup
     sc = ServeConfig(slots=2, max_len=48, max_new_tokens=4)
